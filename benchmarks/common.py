@@ -1,0 +1,139 @@
+"""Shared experiment engine for the paper benchmarks (Tables 2-4,
+Figures 3-5).
+
+Scale note: the paper trains for thousands of rounds on months of CGM
+per patient with an RTX 3090 Ti.  The benchmark harness runs the SAME
+experiment graph on synthetic-twin data at reduced scale by default
+(``--full`` restores paper-scale rounds/patients) so the whole suite
+finishes on a CPU container.  Numbers are therefore comparable ACROSS
+methods/topologies (the paper's claims are relative), not absolute
+mg/dL matches.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core import GluADFL, FedAvg, train_supervised
+from repro.data import load_federated_dataset
+from repro.data.pipeline import FederatedData
+from repro.metrics import all_metrics
+from repro.models import LSTMModel
+from repro.optim import adam
+
+DATASETS = ["ohiot1dm", "abc4d", "ctr3", "replace-bg"]
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "paper"
+
+
+@dataclass
+class Scale:
+    """Benchmark scale knobs (fast CPU defaults vs paper-scale)."""
+
+    fast: bool = True
+    rounds: int = 50
+    sup_steps: int = 350
+    max_patients: int = 8
+    hidden: int = 48
+    batch_size: int = 64
+    seeds: int = 1
+
+    @staticmethod
+    def full() -> "Scale":
+        return Scale(fast=False, rounds=1000, sup_steps=5000,
+                     max_patients=None, hidden=128, seeds=4)
+
+
+_FED_CACHE: dict = {}
+
+
+def load(dataset: str, scale: Scale) -> FederatedData:
+    key = (dataset, scale.fast, scale.max_patients)
+    if key not in _FED_CACHE:
+        _FED_CACHE[key] = load_federated_dataset(
+            dataset, fast=scale.fast, max_patients=scale.max_patients
+        )
+    return _FED_CACHE[key]
+
+
+def eval_population(model, params, fed: FederatedData) -> dict:
+    """Clinical metrics of a population model over a dataset's test split."""
+    preds, ys = [], []
+    for p in fed.patients:
+        if len(p.test_x) == 0:
+            continue
+        pred = model.apply(params, jnp.asarray(p.test_x))
+        preds.append(np.asarray(pred) * fed.sd + fed.mean)
+        ys.append(p.test_y_raw)
+    return all_metrics(np.concatenate(ys), np.concatenate(preds))
+
+
+def train_gluadfl(dataset: str, scale: Scale, *, topology: str = "random",
+                  inactive_ratio: float = 0.0, seed: int = 0, rounds=None):
+    fed = load(dataset, scale)
+    model = LSTMModel(hidden=scale.hidden).as_model()
+    cfg = FLConfig(
+        topology=topology, num_nodes=fed.num_nodes, comm_batch=7,
+        rounds=rounds or scale.rounds, inactive_ratio=inactive_ratio, seed=seed,
+    )
+    tr = GluADFL(model, adam(2e-3), cfg)
+    pop, hist, state = tr.train(
+        jax.random.PRNGKey(seed), fed.x, fed.y, fed.counts,
+        batch_size=scale.batch_size,
+    )
+    return model, pop, hist, fed
+
+
+def train_fedavg(dataset: str, scale: Scale, *, seed: int = 0):
+    fed = load(dataset, scale)
+    model = LSTMModel(hidden=scale.hidden).as_model()
+    cfg = FLConfig(num_nodes=fed.num_nodes, rounds=scale.rounds, local_steps=2, seed=seed)
+    fa = FedAvg(model, adam(2e-3), cfg)
+    params, hist = fa.train(
+        jax.random.PRNGKey(seed), fed.x, fed.y, fed.counts, batch_size=scale.batch_size
+    )
+    return model, params, hist, fed
+
+
+def train_mixed_supervised(dataset: str, scale: Scale, *, model_ctor=None, seed: int = 0):
+    fed = load(dataset, scale)
+    ctor = model_ctor or (lambda: LSTMModel(hidden=scale.hidden).as_model())
+    model = ctor()
+    x = np.concatenate([p.train_x for p in fed.patients])
+    y = np.concatenate([p.train_y for p in fed.patients])
+    vx = np.concatenate([p.val_x for p in fed.patients])
+    vy = np.concatenate([p.val_y for p in fed.patients])
+    params, hist = train_supervised(
+        model, adam(2e-3), jax.random.PRNGKey(seed), x, y,
+        steps=scale.sup_steps, batch_size=scale.batch_size, val=(vx, vy),
+    )
+    return model, params, hist, fed
+
+
+def save_json(name: str, payload) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2))
+    return path
+
+
+def print_metric_table(title: str, rows: dict[str, dict[str, dict[str, float]]]):
+    """rows: {row_label: {col_label: metrics dict}} — prints paper-style."""
+    print(f"\n== {title} ==")
+    cols = sorted({c for r in rows.values() for c in r})
+    header = "train\\test".ljust(14) + "".join(c.rjust(13) for c in cols)
+    print(header)
+    for metric in ("rmse", "mard", "mae", "grmse", "time_lag"):
+        print(f"-- {metric} --")
+        for rl, r in rows.items():
+            line = rl.ljust(14)
+            for c in cols:
+                v = r.get(c, {}).get(metric)
+                line += (f"{v:13.2f}" if v is not None else " " * 13)
+            print(line)

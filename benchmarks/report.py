@@ -1,0 +1,125 @@
+"""Render the dry-run + roofline JSON records into the EXPERIMENTS.md
+markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.report [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+ARCH_ORDER = [
+    "mistral-large-123b", "llava-next-mistral-7b", "yi-34b", "mixtral-8x22b",
+    "qwen2.5-3b", "mamba2-370m", "recurrentgemma-9b", "whisper-medium",
+    "yi-6b", "granite-moe-1b-a400m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(dirname: str) -> dict:
+    out = {}
+    d = ROOT / "experiments" / dirname
+    if not d.exists():
+        return out
+    for f in d.glob("*.json"):
+        r = json.loads(f.read_text())
+        if "shape" in r:
+            out[(r["arch"], r["shape"], r.get("mesh", ""))] = r
+    return out
+
+
+def dryrun_table() -> str:
+    recs = _load("dryrun")
+    lines = [
+        "| arch | shape | mesh | status | compile s | mem/dev GB | HBM % | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("pod16x16", "pod2x16x16"):
+                r = recs.get((a, s, m))
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    lines.append(f"| {a} | {s} | {m} | SKIP (full attention) | — | — | — | — |")
+                    continue
+                mem = r["memory"]["total_per_device_bytes"]
+                colls = ", ".join(
+                    f"{k}:{v['count']}" for k, v in r["collectives"].items()
+                    if isinstance(v, dict)
+                )
+                lines.append(
+                    f"| {a} | {s} | {m} | ok | {r['compile_s']:.1f} | "
+                    f"{mem/1e9:.2f} | {mem/16e9*100:.0f}% | {colls} |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table(dirname: str) -> str:
+    recs = _load(dirname)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful 6ND/HLO |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "pod16x16"))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | SKIP | — |")
+                continue
+            t = r["terms_s"]
+            lines.append(
+                f"| {a} | {s} | {t['compute']:.3f} | {t['memory']:.3f} | "
+                f"{t['collective']:.3f} | **{r['dominant']}** | "
+                f"{r['useful_flop_ratio']:.2f} |"
+            )
+    return "\n".join(lines)
+
+
+def compare_table() -> str:
+    base = _load("roofline_baseline")
+    opt = _load("roofline")
+    lines = [
+        "| arch | shape | baseline bound s | optimized bound s | gain |",
+        "|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            b = base.get((a, s, "pod16x16"))
+            o = opt.get((a, s, "pod16x16"))
+            if not b or not o or b["status"] != "ok" or o["status"] != "ok":
+                continue
+            bb = max(b["terms_s"].values())
+            ob = max(o["terms_s"].values())
+            lines.append(
+                f"| {a} | {s} | {bb:.2f} | {ob:.2f} | {bb/ob:.2f}x |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "baseline", "compare"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run (80 records)\n")
+        print(dryrun_table())
+    if args.section in ("all", "baseline"):
+        print("\n### Roofline — paper-faithful baseline (single-pod)\n")
+        print(roofline_table("roofline_baseline"))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline — optimized (attention-pinned)\n")
+        print(roofline_table("roofline"))
+    if args.section in ("all", "compare"):
+        print("\n### Baseline vs optimized\n")
+        print(compare_table())
+
+
+if __name__ == "__main__":
+    main()

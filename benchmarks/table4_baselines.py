@@ -1,0 +1,112 @@
+"""Table 4: BG prediction for seen/unseen patients by ALL population
+methods: LR, XGBoost-like GBT, LSTM (supervised), N-BEATS, NHiTS, MAML,
+MetaSGD, FedAvg, GluADFL(Ring/Cluster/Random)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    DATASETS,
+    Scale,
+    eval_population,
+    load,
+    save_json,
+    train_fedavg,
+    train_gluadfl,
+    train_mixed_supervised,
+)
+from repro.core import MAML, MetaSGD
+from repro.data.pipeline import FederatedData
+from repro.metrics import all_metrics
+from repro.models import GradientBoostedTrees, LinearModel, LSTMModel, NBeatsModel, NHiTSModel
+from repro.models.linear import fit_closed_form
+from repro.optim import adam
+
+
+def _eval_gbt(gbt, params, fed: FederatedData) -> dict:
+    preds, ys = [], []
+    for p in fed.patients:
+        if len(p.test_x) == 0:
+            continue
+        pred = np.asarray(gbt.predict(params, jnp.asarray(p.test_x)))
+        preds.append(pred * fed.sd + fed.mean)
+        ys.append(p.test_y_raw)
+    return all_metrics(np.concatenate(ys), np.concatenate(preds))
+
+
+def _train_eval_method(method: str, train_ds: str, scale: Scale):
+    """Returns eval-fn(test_fed) -> metrics."""
+    fed = load(train_ds, scale)
+    x = np.concatenate([p.train_x for p in fed.patients])
+    y = np.concatenate([p.train_y for p in fed.patients])
+
+    if method == "lr":
+        params = fit_closed_form(jnp.asarray(x), jnp.asarray(y))
+        model = LinearModel(history_len=12).as_model()
+        return lambda te: eval_population(model, params, te)
+    if method == "xgboost":
+        gbt = GradientBoostedTrees(num_trees=40, depth=4, lr=0.15)
+        params = gbt.fit(x, y)
+        return lambda te: _eval_gbt(gbt, params, te)
+    if method in ("lstm", "nbeats", "nhits"):
+        ctor = {
+            "lstm": lambda: LSTMModel(hidden=scale.hidden).as_model(),
+            "nbeats": lambda: NBeatsModel(hidden=scale.hidden).as_model(),
+            "nhits": lambda: NHiTSModel(hidden=scale.hidden).as_model(),
+        }[method]
+        model, params, _, _ = train_mixed_supervised(train_ds, scale, model_ctor=ctor)
+        return lambda te: eval_population(model, params, te)
+    if method in ("maml", "metasgd"):
+        model = LSTMModel(hidden=scale.hidden).as_model()
+        cls = MAML if method == "maml" else MetaSGD
+        meta = cls(model, adam(1e-3), inner_lr=1e-2, inner_steps=3)
+        params, _, _ = meta.train(
+            jax.random.PRNGKey(0), fed.x, fed.y, fed.counts,
+            batch_size=scale.batch_size, steps=scale.rounds,
+        )
+        # paper: evaluated WITHOUT test-time fine-tuning
+        return lambda te: eval_population(model, params, te)
+    if method == "fedavg":
+        model, params, _, _ = train_fedavg(train_ds, scale)
+        return lambda te: eval_population(model, params, te)
+    if method.startswith("gluadfl"):
+        topo = method.split("-")[1]
+        model, pop, _, _ = train_gluadfl(train_ds, scale, topology=topo)
+        return lambda te: eval_population(model, pop, te)
+    raise KeyError(method)
+
+
+METHODS = [
+    "lr", "xgboost", "lstm", "nbeats", "nhits", "maml", "metasgd",
+    "fedavg", "gluadfl-ring", "gluadfl-cluster", "gluadfl-random",
+]
+
+
+def run(scale: Scale | None = None, datasets=None, methods=None) -> dict:
+    scale = scale or Scale()
+    datasets = datasets or DATASETS
+    methods = methods or METHODS
+    out: dict = {}
+    for train_ds in datasets:
+        out[train_ds] = {}
+        for method in methods:
+            ev = _train_eval_method(method, train_ds, scale)
+            seen = ev(load(train_ds, scale))
+            unseen = [ev(load(d, scale)) for d in datasets if d != train_ds]
+            unseen_mean = {
+                k: float(np.mean([u[k] for u in unseen])) for k in seen
+            } if unseen else {}
+            out[train_ds][method] = {"seen": seen, "unseen": unseen_mean}
+            print(
+                f"[{train_ds:11s}] {method:16s} seen RMSE {seen['rmse']:6.2f} "
+                f"gRMSE {seen['grmse']:6.2f} | unseen RMSE "
+                f"{unseen_mean.get('rmse', float('nan')):6.2f}"
+            )
+    save_json("table4_baselines", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

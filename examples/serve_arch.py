@@ -1,0 +1,12 @@
+"""Serve a (reduced) assigned architecture with batched greedy decoding
+through the KV-cache/state path — the same code the decode_32k and
+long_500k dry-runs lower at production shape.
+
+    PYTHONPATH=src python examples/serve_arch.py --arch mamba2-370m
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

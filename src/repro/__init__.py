@@ -1,0 +1,14 @@
+"""repro — GluADFL (asynchronous decentralized federated learning) in
+JAX, plus the multi-pod framework for the assigned architecture pool.
+
+Public surface:
+    repro.core      — GluADFL, FedAvg, topologies, gossip, meta-learning
+    repro.models    — LSTM + population-model baselines
+    repro.data      — synthetic CGM dataset twins + pipeline
+    repro.metrics   — clinical BGLP metrics
+    repro.arch      — the 10 assigned architectures (build_arch)
+    repro.kernels   — Pallas TPU kernels (gossip_mix, lstm_cell, swa_attention)
+    repro.launch    — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.arch.api import Arch, TrainState, build_arch

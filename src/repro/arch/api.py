@@ -1,0 +1,176 @@
+"""Uniform architecture API + assigned input shapes.
+
+``build_arch(cfg)`` dispatches on ``cfg.family`` and returns an ``Arch``
+with a uniform surface the launcher / dry-run / benchmarks consume:
+
+    init_params(key) -> params
+    loss_fn(params, batch) -> scalar                     (train shapes)
+    prefill_fn(params, batch) -> (logits, cache/state)   (prefill shapes)
+    decode_fn(params, state, batch) -> (logits, state)   (decode shapes)
+    init_decode_state(params, batch_size, seq_len) -> state
+    input_specs(shape_name) -> ShapeDtypeStruct batch (no allocation)
+
+Input shapes (assigned):
+    train_4k     seq 4096    global batch 256   train_step
+    prefill_32k  seq 32768   global batch 32    prefill
+    decode_32k   seq 32768   global batch 128   decode_step (1 token)
+    long_500k    seq 524288  global batch 1     decode_step (sub-quadratic
+                                                 archs only; see DESIGN.md)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.nn.layers import pad_vocab
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass
+class Arch:
+    cfg: ArchConfig
+    init_params: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_decode_state: Callable
+    supports_long: bool
+
+    def supports(self, shape: str) -> bool:
+        if shape == "long_500k":
+            return self.supports_long
+        return True
+
+    # -- input specs -----------------------------------------------------
+    def input_specs(self, shape_name: str, *, override_batch: int | None = None,
+                    override_seq: int | None = None) -> PyTree:
+        cfg = self.cfg
+        sh = SHAPES[shape_name]
+        b = override_batch or sh.global_batch
+        s = override_seq or sh.seq_len
+        i32 = jnp.int32
+        act_dtype = jnp.dtype(cfg.dtype)
+        tok = lambda *shape: jax.ShapeDtypeStruct(shape, i32)
+
+        if sh.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                tv = cfg.vision_tokens
+                from repro.arch.lm import VISION_STUB_DIM
+
+                spec = {
+                    "patches": jax.ShapeDtypeStruct((b, tv, VISION_STUB_DIM), act_dtype),
+                    "tokens": tok(b, s - tv),
+                }
+                if sh.kind == "train":
+                    spec["labels"] = tok(b, s)
+                return spec
+            if cfg.family == "encdec":
+                spec = {
+                    "frames": jax.ShapeDtypeStruct(
+                        (b, cfg.encoder_seq, cfg.d_model), act_dtype
+                    ),
+                    "tokens": tok(b, s),
+                }
+                if sh.kind == "train":
+                    spec["labels"] = tok(b, s)
+                return spec
+            spec = {"tokens": tok(b, s)}
+            if sh.kind == "train":
+                spec["labels"] = tok(b, s)
+            return spec
+
+        # decode: one new token against a seq_len-deep state
+        return {"token": tok(b, 1), "pos": jax.ShapeDtypeStruct((), i32)}
+
+    def decode_state_specs(self, shape_name: str, *, override_batch: int | None = None,
+                           override_seq: int | None = None) -> PyTree:
+        sh = SHAPES[shape_name]
+        b = override_batch or sh.global_batch
+        s = override_seq or sh.seq_len
+        params_spec = jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
+        return jax.eval_shape(
+            lambda p: self.init_decode_state(p, b, s), params_spec
+        )
+
+
+# ---------------------------------------------------------------------------
+# family dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_arch(cfg: ArchConfig) -> Arch:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.arch import lm
+
+        return Arch(
+            cfg=cfg,
+            init_params=lambda key: lm.init_params(key, cfg),
+            loss_fn=lambda p, b: lm.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b: lm.prefill(p, cfg, b),
+            decode_fn=lambda p, st, b: lm.decode_step(p, cfg, st, b),
+            init_decode_state=lambda p, bsz, s: lm.init_cache(cfg, bsz, s),
+            supports_long=cfg.sliding_window > 0,
+        )
+    if cfg.family == "ssm":
+        from repro.arch import ssm_lm
+
+        return Arch(
+            cfg=cfg,
+            init_params=lambda key: ssm_lm.init_params(key, cfg),
+            loss_fn=lambda p, b: ssm_lm.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b: ssm_lm.prefill(p, cfg, b),
+            decode_fn=lambda p, st, b: ssm_lm.decode_step(p, cfg, st, b),
+            init_decode_state=lambda p, bsz, s: ssm_lm.init_state(cfg, bsz),
+            supports_long=True,
+        )
+    if cfg.family == "hybrid":
+        from repro.arch import hybrid_lm
+
+        return Arch(
+            cfg=cfg,
+            init_params=lambda key: hybrid_lm.init_params(key, cfg),
+            loss_fn=lambda p, b: hybrid_lm.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b: (hybrid_lm.forward(p, cfg, b)[0][:, -1:], None),
+            decode_fn=lambda p, st, b: hybrid_lm.decode_step(p, cfg, st, b),
+            init_decode_state=lambda p, bsz, s: hybrid_lm.init_state(cfg, bsz, s),
+            supports_long=True,
+        )
+    if cfg.family == "encdec":
+        from repro.arch import encdec
+
+        return Arch(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_params(key, cfg),
+            loss_fn=lambda p, b: encdec.loss_fn(p, cfg, b),
+            prefill_fn=lambda p, b: (encdec.forward(p, cfg, b)[0][:, -1:], None),
+            decode_fn=lambda p, st, b: encdec.decode_step(p, cfg, st, b),
+            init_decode_state=lambda p, bsz, s: encdec.init_state(p, cfg, bsz, s),
+            supports_long=False,
+        )
+    raise KeyError(f"unknown family {cfg.family!r}")
+
+
+# re-exported for launchers
+from repro.arch.common import TrainState, init_train_state, make_train_step  # noqa: E402,F401

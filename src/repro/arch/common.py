@@ -1,0 +1,147 @@
+"""Shared pieces of the architecture assemblies: loss, train-state,
+gradient-accumulated train step, and decode-loop scaffolding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def cast_params(params: PyTree, dtype) -> PyTree:
+    """Cast f32 master params to the compute dtype ONCE at forward entry.
+
+    The cast runs on the *sharded* leaves, so FSDP all-gathers move bf16
+    (half the bytes) instead of gathering f32 and converting after — the
+    cast-then-gather ordering (§Perf).  Gradients flow through the cast
+    (standard mixed precision: bf16 compute, f32 master/update).
+    """
+    dt = jnp.dtype(dtype)
+    if dt == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda l: l.astype(dt) if l.dtype == jnp.float32 else l, params
+    )
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over positions with label >= 0.  logits (B,S,V) any dtype;
+    computed in f32 without materializing one-hots (vocab may be sharded).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: PyTree
+    m: PyTree            # adam first moment
+    v: PyTree            # adam second moment
+    step: jnp.ndarray
+
+
+def init_train_state(params: PyTree) -> TrainState:
+    return TrainState(
+        params=params,
+        m=jax.tree.map(jnp.zeros_like, params),
+        v=jax.tree.map(jnp.zeros_like, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adam_apply(state: TrainState, grads: PyTree, *, lr: float = 3e-4,
+               b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8) -> TrainState:
+    step = state.step + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        state.params, m, v,
+    )
+    return TrainState(params=params, m=m, v=v, step=step)
+
+
+def make_train_step(
+    loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+    *,
+    num_microbatches: int = 1,
+    lr: float = 3e-4,
+    data_axes: tuple[str, ...] = (),
+):
+    """Gradient-accumulated train step.
+
+    ``loss_fn(params, microbatch) -> scalar``.  The global batch (leaves
+    (B, ...)) is split into ``num_microbatches`` along dim 0 and gradients
+    are accumulated in f32 via lax.scan — the standard way to fit large-
+    model activations in HBM (the remat policy lives inside loss_fn).
+
+    ``data_axes``: mesh axes carrying the batch dim.  The microbatch
+    reshape (B,) -> (M, B/M) must KEEP the batch shard on dim 1 — without
+    an explicit constraint GSPMD can replicate the microbatch and blow
+    activation memory by the data-axis size (§Perf iteration 0).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def _constrain_micro(mb: PyTree) -> PyTree:
+        if not data_axes:
+            return mb
+
+        def leaf(l):
+            if l.ndim >= 2:
+                return jax.lax.with_sharding_constraint(
+                    l, P(None, data_axes, *([None] * (l.ndim - 2)))
+                )
+            return l
+
+        return jax.tree.map(leaf, mb)
+
+    def train_step(state: TrainState, batch: PyTree):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda l: l.reshape((num_microbatches, l.shape[0] // num_microbatches)
+                                    + l.shape[1:]),
+                batch,
+            )
+            mb = _constrain_micro(mb)
+
+            def acc(carry, micro):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, micro)
+                return (
+                    loss_acc + loss,
+                    jax.tree.map(jnp.add, grad_acc, grads),
+                ), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / num_microbatches
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+        new_state = adam_apply(state, grads, lr=lr)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+        )
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    inv = jnp.exp(-jnp.arange(0, dim, 2).astype(jnp.float32) / dim * jnp.log(10000.0))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :dim]

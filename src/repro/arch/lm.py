@@ -1,0 +1,264 @@
+"""Decoder-only LM assembly: dense GQA, MoE, and VLM families.
+
+One parameter tree, three entry points:
+  * ``forward``      — full-sequence logits (training / teacher forcing),
+  * ``prefill``      — logits + per-layer KV caches (ring-truncated for
+                       sliding-window archs),
+  * ``decode_step``  — one token against the caches.
+
+Layers are STACKED (leading L dim) and iterated with ``jax.lax.scan`` so
+the 88-layer config lowers to a compact HLO, with ``jax.checkpoint`` on
+the layer body (full per-layer remat — the §Perf baseline).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.arch.sharding import constrain_act, constrain_attn
+from repro.nn.attention import KVCache, decode_attention, gqa_attention
+from repro.nn.layers import dense, embed, pad_vocab, rms_norm, rope, swiglu_ffn
+from repro.nn.moe import init_moe, moe_ffn
+
+PyTree = Any
+
+VISION_STUB_DIM = 1024  # stubbed vision-encoder embedding width (DESIGN.md)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ArchConfig) -> PyTree:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, k = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1_scale": jnp.zeros((d,), jnp.float32),
+        "ln2_scale": jnp.zeros((d,), jnp.float32),
+        "wq": jax.random.normal(ks[0], (d, h * hd), jnp.float32) * d**-0.5,
+        "wk": jax.random.normal(ks[1], (d, k * hd), jnp.float32) * d**-0.5,
+        "wv": jax.random.normal(ks[2], (d, k * hd), jnp.float32) * d**-0.5,
+        "wo": jax.random.normal(ks[3], (h * hd, d), jnp.float32) * (h * hd) ** -0.5,
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((k * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((k * hd,), jnp.float32)
+    if cfg.num_experts:
+        p["moe"] = init_moe(ks[4], d, cfg.d_ff, cfg.num_experts)
+    else:
+        from repro.nn.layers import init_swiglu
+
+        p.update(init_swiglu(ks[4], d, cfg.d_ff))
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    vp = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    layers = [init_layer(keys[i], cfg) for i in range(cfg.num_layers)]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *layers)
+    p = {
+        "embed": jax.random.normal(keys[-1], (vp, d), jnp.float32) * 0.02,
+        "layers": stacked,
+        "final_scale": jnp.zeros((d,), jnp.float32),
+        "lm_head": jax.random.normal(keys[-2], (d, vp), jnp.float32) * d**-0.5,
+    }
+    if cfg.family == "vlm":
+        p["vision_proj"] = {
+            "w_in": jax.random.normal(keys[-3], (VISION_STUB_DIM, d), jnp.float32)
+            * VISION_STUB_DIM**-0.5,
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer body (shared by forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(x, lp, cfg: ArchConfig, positions):
+    b, s, d = x.shape
+    h, k, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(x, lp["wq"], lp.get("bq")).reshape(b, s, h, hd)
+    kk = dense(x, lp["wk"], lp.get("bk")).reshape(b, s, k, hd)
+    v = dense(x, lp["wv"], lp.get("bv")).reshape(b, s, k, hd)
+    q = constrain_attn(rope(q, positions, cfg.rope_theta), "bshd")
+    kk = constrain_attn(rope(kk, positions, cfg.rope_theta), "bshd", kv=True)
+    return q, kk, constrain_attn(v, "bshd", kv=True)
+
+
+def layer_forward(x, lp, cfg: ArchConfig, positions):
+    """Full-seq layer; returns (x, (k, v), aux).
+
+    ``cfg.parallel_block``: PaLM-style parallel residual — attention and
+    MLP both read norm(x) and their outputs are summed BEFORE the single
+    residual all-reduce, halving per-layer activation collectives (§Perf
+    H2 iteration; beyond-paper variant, changes the model's math).
+    """
+    h = rms_norm(x, lp["ln1_scale"], cfg.norm_eps)
+    q, k, v = _qkv(h, lp, cfg, positions)
+    attn = gqa_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    attn_out = dense(attn.reshape(x.shape[0], x.shape[1], -1), lp["wo"])
+    if cfg.parallel_block:
+        if cfg.num_experts:
+            ff, aux = moe_ffn(
+                h, lp["moe"], top_k=cfg.experts_per_token,
+                capacity_factor=cfg.expert_capacity_factor,
+            )
+        else:
+            ff, aux = swiglu_ffn(h, lp), {}
+        return x + attn_out + ff, (k, v), aux
+    x = x + attn_out
+    h = rms_norm(x, lp["ln2_scale"], cfg.norm_eps)
+    if cfg.num_experts:
+        ff, aux = moe_ffn(
+            h, lp["moe"], top_k=cfg.experts_per_token,
+            capacity_factor=cfg.expert_capacity_factor,
+        )
+    else:
+        ff, aux = swiglu_ffn(h, lp), {}
+    return x + ff, (k, v), aux
+
+
+def layer_decode(x, lp, cache: KVCache, cfg: ArchConfig, pos):
+    """One-token layer. x (B,1,d); pos scalar absolute position."""
+    h = rms_norm(x, lp["ln1_scale"], cfg.norm_eps)
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _qkv(h, lp, cfg, positions.reshape(1))
+    cache = cache.append(k, v)
+    attn = decode_attention(q, cache, window=cfg.sliding_window)
+    x = x + dense(attn.reshape(x.shape[0], 1, -1), lp["wo"])
+    h = rms_norm(x, lp["ln2_scale"], cfg.norm_eps)
+    if cfg.num_experts:
+        ff, _ = moe_ffn(
+            h, lp["moe"], top_k=cfg.experts_per_token,
+            capacity_factor=cfg.expert_capacity_factor,
+        )
+    else:
+        ff = swiglu_ffn(h, lp)
+    return x + ff, cache
+
+
+# ---------------------------------------------------------------------------
+# model-level entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch, dtype):
+    """Token (and VLM patch) embedding -> (B, S, d)."""
+    x = embed(batch["tokens"], params["embed"], dtype)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dtype)  # (B, Tv, VISION_STUB_DIM)
+        vis = dense(patches, params["vision_proj"]["w_in"])
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def forward(params, cfg: ArchConfig, batch, *, remat: bool = True) -> jnp.ndarray:
+    """Teacher-forcing logits (B, S_total, Vp) plus MoE aux losses."""
+    from repro.arch.common import cast_params
+
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    x = _embed_inputs(params, cfg, batch, dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        x = constrain_act(carry)
+        x, _, aux = layer_forward(x, lp, cfg, positions)
+        x = constrain_act(x)
+        aux_vec = (
+            jnp.stack([aux["load_balance"], aux["router_z"]])
+            if aux
+            else jnp.zeros((2,), jnp.float32)
+        )
+        return x, aux_vec
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x = constrain_act(x)
+    x, aux_stack = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["final_scale"], cfg.norm_eps)
+    logits = dense(x, params["lm_head"])
+    return logits, jnp.mean(aux_stack, axis=0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, aux_weight: float = 0.01):
+    from repro.arch.common import cross_entropy
+
+    logits, aux = forward(params, cfg, batch)
+    ce = cross_entropy(logits, batch["labels"])
+    if cfg.num_experts:
+        ce = ce + aux_weight * aux[0] + 1e-3 * aux[1]
+    return ce
+
+
+def cache_capacity(cfg: ArchConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> KVCache:
+    """Stacked (L-leading) caches for decode."""
+    cap = cache_capacity(cfg, seq_len)
+    dtype = jnp.dtype(cfg.dtype)
+    one = lambda: KVCache.init(batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype)
+    caches = [one() for _ in range(cfg.num_layers)]
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+
+
+def prefill(params, cfg: ArchConfig, batch):
+    """Prefill: returns (last-position logits, stacked KV caches)."""
+    from repro.arch.common import cast_params
+
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    x = _embed_inputs(params, cfg, batch, dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    cap = cache_capacity(cfg, s)
+
+    def body(x, lp):
+        x = constrain_act(x)
+        x, (k, v), _ = layer_forward(x, lp, cfg, positions)
+        # keep only the last `cap` positions (ring layout: contiguous here)
+        return constrain_act(x), (k[:, -cap:], v[:, -cap:])
+
+    x, kvs = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_scale"], cfg.norm_eps)
+    logits = dense(x, params["lm_head"])
+    b = x.shape[0]
+    caches = KVCache(
+        k=kvs[0], v=kvs[1],
+        pos=jnp.full((cfg.num_layers,), s, jnp.int32),
+    )
+    return logits, caches
+
+
+def decode_step(params, cfg: ArchConfig, caches: KVCache, batch):
+    """One decode step.  batch = {"token": (B, 1) int32, "pos": scalar}.
+    ``caches`` leaves have leading L.  Returns (logits (B,1,Vp), caches).
+    """
+    from repro.arch.common import cast_params
+
+    dtype = jnp.dtype(cfg.dtype)
+    params = cast_params(params, dtype)
+    x = embed(batch["token"], params["embed"], dtype)
+    pos = batch["pos"]
+
+    def body(x, scanned):
+        lp, cache_l = scanned
+        x, new_cache = layer_decode(x, lp, cache_l, cfg, pos)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = rms_norm(x, params["final_scale"], cfg.norm_eps)
+    logits = dense(x, params["lm_head"])
+    return logits, new_caches

@@ -1,0 +1,215 @@
+"""Partition rules: param-path -> PartitionSpec, divisibility-aware.
+
+Policy (DESIGN.md §6):
+  * weights shard their LARGEST model-parallel-friendly dim on "model"
+    (d_ff, vocab, fused-QKV output, expert dim when divisible),
+  * a dim is sharded only if evenly divisible by the axis size — else the
+    next preference is tried, else replicated (this is what makes the
+    8-kv-head / 16-way-axis case work: the fused kv projection output
+    1024 shards, the head count would not),
+  * stacked-layer leaves get a leading ``None`` for the scan dim,
+  * batch dims of activations shard on "data" (+"pod" multi-pod).
+
+Rules are keyed by the LAST path component (param names are chosen to be
+globally unambiguous), with a small table of (dim-index preferences).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# name -> list of (dim, axis-kind) preferences; "model" only for now.
+# dim indices are for the UNSTACKED param (no leading layer dim).
+_RULES: dict[str, tuple[int, ...]] = {
+    # embeddings / heads
+    "embed": (0,),          # (V, d): shard vocab
+    "lm_head": (1,),        # (d, V): shard vocab
+    "pos_embed": (),
+    # attention
+    "wq": (1,), "wk": (1,), "wv": (1,), "wo": (0,),
+    "bq": (0,), "bk": (0,), "bv": (0,),
+    # mlp
+    "w_gate": (1,), "w_up": (1,), "w_down": (0,),
+    "w_in": (1,), "w_out": (0,), "b_in": (0,), "b_out": (),
+    # moe (stacked (E, d, ff) / (E, ff, d)): prefer expert dim, then hidden
+    "moe_w_gate": (0, 2), "moe_w_up": (0, 2), "moe_w_down": (0, 1),
+    "router": (),
+    # mamba2
+    "in_proj": (1,), "out_proj": (0,), "conv_w": (1,), "conv_b": (0,),
+    "a_log": (), "dt_bias": (), "d_skip": (), "norm_scale": (),
+    # rglru / griffin
+    "w_in_x": (1,), "w_in_gate": (1,), "w_a": (1,), "w_x": (1,),
+    "b_a": (0,), "b_x": (0,), "lam": (0,),
+    # norms / misc
+    "scale": (), "bias": (), "b": (),
+}
+
+
+def _spec_for(name: str, shape: tuple[int, ...], model_axis: str, axis_size: int,
+              stacked: bool, fsdp_axes: tuple[str, ...] = (), fsdp_size: int = 1) -> P:
+    prefs = _RULES.get(name, None)
+    ndim = len(shape)
+    off = 1 if stacked else 0
+    entries: list = [None] * ndim
+    if prefs is None:
+        # default: shard the largest divisible dim (skipping the layer dim)
+        order = sorted(range(off, ndim), key=lambda i: -shape[i])
+        prefs_abs = order
+    else:
+        prefs_abs = [p + off for p in prefs]
+    for dim in prefs_abs:
+        if dim < ndim and shape[dim] % axis_size == 0 and shape[dim] >= axis_size:
+            entries[dim] = model_axis
+            break
+    if fsdp_axes and fsdp_size > 1:
+        # serving/FSDP: additionally shard the largest remaining divisible
+        # dim over the data axes (weights all-gather per layer on use)
+        cands = sorted(
+            (i for i in range(off, ndim) if entries[i] is None),
+            key=lambda i: -shape[i],
+        )
+        for dim in cands:
+            if shape[dim] % fsdp_size == 0 and shape[dim] >= fsdp_size:
+                entries[dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+    return P(*entries)
+
+
+def param_pspecs(params: PyTree, *, model_axis: str = "model", axis_size: int,
+                 fsdp_axes: tuple[str, ...] = (), fsdp_size: int = 1,
+                 stacked_subtrees: tuple[str, ...] = ("layers", "enc_layers", "dec_layers", "blocks")) -> PyTree:
+    """PartitionSpec tree matching ``params``."""
+
+    def fn(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        stacked = any(k in stacked_subtrees for k in keys[:-1])
+        # disambiguate MoE expert weights from dense MLP weights
+        if name in ("w_gate", "w_up", "w_down") and (len(leaf.shape) - (1 if stacked else 0)) == 3:
+            name = "moe_" + name
+        return _spec_for(name, leaf.shape, model_axis, axis_size, stacked,
+                         fsdp_axes, fsdp_size)
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Batch-sharding axes: ("pod","data") when the pod axis exists."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, seq_axis: int | None = None) -> P:
+    """(B, ...) activation spec: batch on data axes."""
+    entries: list = [data_axes(mesh)] + [None] * (ndim - 1)
+    return P(*entries)
+
+
+def shardings_for(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding policy (residual-stream constraints)
+#
+# GSPMD propagation can otherwise let activations inherit FSDP *weight*
+# shardings (batch replicated, d_model scattered over "data") which blows
+# saved-activation memory by the data-axis size — found in the first
+# 123B dry-run (§Perf iteration 0b).  The policy pins the residual
+# stream to (batch -> data axes, seq -> optional "model" for sequence
+# parallelism, d_model -> replicated) at layer boundaries.
+# ---------------------------------------------------------------------------
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+
+_ACT_POLICY: ContextVar = ContextVar("act_policy", default=None)
+
+
+@contextmanager
+def activation_policy(batch_axes, *, seq_axis=None, seq_axis_size: int = 1,
+                      attn_axis=None, attn_axis_size: int = 1,
+                      attn_seq_fallback: bool = True):
+    """Enable residual-stream constraints inside a lowering context.
+
+    ``batch_axes``: mesh axis (or tuple) for the batch dim.
+    ``seq_axis``: optional axis for the seq dim (sequence parallelism —
+    the §Perf lever for saved-activation memory).
+    ``attn_axis``: optional axis to pin attention internals ((B,S,H,hd)
+    tensors and flash-scan carries): heads when divisible, else the q
+    seq dim — kills GSPMD resharding churn inside blocked attention
+    (§Perf hillclimb H1).
+    """
+    tok = _ACT_POLICY.set(
+        {"batch": batch_axes, "seq": seq_axis, "seq_size": seq_axis_size,
+         "attn": attn_axis, "attn_size": attn_axis_size,
+         "attn_seq_fallback": attn_seq_fallback}
+    )
+    try:
+        yield
+    finally:
+        _ACT_POLICY.reset(tok)
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 1 and n % k == 0 and n >= k
+
+
+def constrain_attn(t, layout: str, *, kv: bool = False):
+    """Pin attention internals.  layout: 'bshd' for (B,S,H,hd) q/k/v,
+    'bhsd' for (B,H,S,hd) scan accs, 'bhs' for (B,H,S) softmax stats.
+
+    Prefers sharding H on the attn axis, falling back to the QUERY seq
+    dim.  K/V tensors (``kv=True``) never shard their seq dim — blocked
+    flash attention slices it dynamically, and an S-sharded KV turns
+    every block slice into a reshard (measured 4x collective blow-up on
+    mistral-large, §Perf H2 iteration 1) — they replicate heads instead.
+    """
+    pol = _ACT_POLICY.get()
+    if pol is None or not pol.get("attn"):
+        return t
+    ax, size = pol["attn"], pol["attn_size"]
+    batch = pol["batch"]
+    dims = {c: i for i, c in enumerate(layout)}
+    entries: list = [None] * t.ndim
+    if "b" in dims:
+        entries[dims["b"]] = batch
+    h_i, s_i = dims.get("h"), dims.get("s")
+    if h_i is not None and _divisible(t.shape[h_i], size):
+        entries[h_i] = ax
+    elif (not kv) and pol.get("attn_seq_fallback", True) and s_i is not None \
+            and _divisible(t.shape[s_i], size):
+        # query-seq fallback: a 22x collective win for 32k PREFILL when
+        # heads don't divide, but a 2.2x REGRESSION for the training
+        # backward (dq resharding) — enabled for serve paths only
+        # (§Perf H1 it-3).
+        entries[s_i] = ax
+    elif not kv:
+        # nothing shardable on the model axis: constraining batch alone
+        # forces GSPMD to replicate the attention compute across "model"
+        # (measured 2.5x compute blow-up, yi-34b train) — stay out of
+        # propagation's way entirely.
+        return t
+    return jax.lax.with_sharding_constraint(t, P(*entries))
+
+
+def constrain_act(x):
+    """Pin a (B, S, d) activation to the policy (no-op without one)."""
+    pol = _ACT_POLICY.get()
+    if pol is None or x.ndim != 3:
+        return x
+    seq = (
+        pol["seq"]
+        if (pol["seq"] and x.shape[1] % max(pol["seq_size"], 1) == 0
+            and x.shape[1] >= pol["seq_size"])
+        else None
+    )
+    return jax.lax.with_sharding_constraint(x, P(pol["batch"], seq, None))

@@ -1,0 +1,11 @@
+from repro.config.base import (
+    ArchConfig,
+    FLConfig,
+    DataConfig,
+    TrainConfig,
+    ExperimentConfig,
+    register_arch,
+    get_arch_config,
+    list_archs,
+    apply_overrides,
+)

@@ -1,0 +1,14 @@
+# Importing this package populates the architecture registry.
+from repro.configs import (  # noqa: F401
+    glucose_lstm,
+    mistral_large_123b,
+    llava_next_mistral_7b,
+    yi_34b,
+    mixtral_8x22b,
+    qwen2_5_3b,
+    mamba2_370m,
+    recurrentgemma_9b,
+    whisper_medium,
+    yi_6b,
+    granite_moe_1b_a400m,
+)

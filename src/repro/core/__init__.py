@@ -1,0 +1,20 @@
+# The paper's primary contribution: asynchronous decentralized federated
+# learning (GluADFL) — topologies, gossip mixing, wait-free scheduling,
+# Algorithm 1, and the baselines it is compared against.
+from repro.core.topology import (
+    ring_adjacency,
+    cluster_adjacency,
+    star_adjacency,
+    full_adjacency,
+    random_adjacency,
+    round_adjacency,
+    mixing_matrix,
+    spectral_gap,
+)
+from repro.core.async_sched import bernoulli_active, markov_active, staleness_update
+from repro.core.gossip import gossip_mix_tree, gossip_mix_kernel
+from repro.core.gluadfl import GluADFL, FLState
+from repro.core.fedavg import FedAvg
+from repro.core.meta import MAML, MetaSGD
+from repro.core.supervised import train_supervised
+from repro.core.personalize import personalize

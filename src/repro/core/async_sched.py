@@ -1,0 +1,48 @@
+"""Wait-free (asynchronous) participation scheduling (paper §3.3, Fig 5).
+
+The paper's asynchrony is wall-clock: slow/busy phones drop out of rounds
+and rejoin at will.  Inside one SPMD program the statistically equivalent
+object is the per-round *active mask*; inactive nodes neither communicate
+nor train that round (their mixing row is the identity and their SGD step
+is masked out), i.e. they hold stale parameters until they rejoin —
+exactly the SWIFT-style wait-free semantics the paper adopts.
+
+Schedules provided:
+  * bernoulli   — iid node activity, P(active) = 1 - inactive_ratio
+                  (what the paper sweeps in Fig 5),
+  * markov      — sticky busy/free states (a phone that is busy tends to
+                  stay busy), for the beyond-paper staleness study,
+  * round_robin — deterministic fraction active, for tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bernoulli_active(key, n: int, inactive_ratio: float) -> jnp.ndarray:
+    if inactive_ratio <= 0.0:
+        return jnp.ones((n,), jnp.float32)
+    u = jax.random.uniform(key, (n,))
+    active = (u >= inactive_ratio).astype(jnp.float32)
+    # guarantee >= 1 active node (the round is a no-op otherwise)
+    any_active = jnp.max(active)
+    fallback = jnp.zeros((n,)).at[jnp.argmax(u)].set(1.0)
+    return jnp.where(any_active > 0, active, fallback)
+
+
+def markov_active(key, prev_active: jnp.ndarray, p_stay_active=0.9, p_stay_inactive=0.7):
+    u = jax.random.uniform(key, prev_active.shape)
+    stay = jnp.where(prev_active > 0, p_stay_active, 1.0 - p_stay_inactive)
+    return (u < stay).astype(jnp.float32)
+
+
+def round_robin_active(t: int, n: int, active_fraction: float) -> jnp.ndarray:
+    k = max(1, int(n * active_fraction))
+    idx = (jnp.arange(k) + t * k) % n
+    return jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+
+
+def staleness_update(staleness: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """Rounds since each node last participated (0 when active)."""
+    return (staleness + 1) * (1 - active)

@@ -1,0 +1,89 @@
+"""FedAvg baseline (McMahan et al., AISTATS'17) — the paper's centralized
+FL comparison (star topology, Figure 1b).
+
+Round: server broadcasts w; each participating client runs E local SGD
+steps on its own data; server averages client models weighted by their
+sample counts.  Vectorized over clients exactly like GluADFL so the two
+trainers differ only in communication structure.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FLConfig
+from repro.models.base import Model
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+class FedAvg:
+    def __init__(
+        self,
+        model: Model,
+        optimizer: Optimizer,
+        cfg: FLConfig,
+        *,
+        local_epochs: int = 1,
+        loss_fn: Callable | None = None,
+    ):
+        self.model = model
+        self.optimizer = optimizer
+        self.cfg = cfg
+        self.local_steps = max(cfg.local_steps, local_epochs)
+        self.loss_fn = loss_fn or (
+            lambda p, x, y: jnp.mean(jnp.square(model.apply(p, x) - y))
+        )
+        self._round_jit = jax.jit(self._round, static_argnames=("batch_size",))
+
+    def _client_update(self, key, params, x, y, count, batch_size):
+        opt_state = self.optimizer.init(params)
+
+        def step(carry, k):
+            p, st = carry
+            idx = jax.random.randint(k, (batch_size,), 0, jnp.maximum(count, 1))
+            loss, grads = jax.value_and_grad(self.loss_fn)(p, x[idx], y[idx])
+            p, st = self.optimizer.update(grads, st, p)
+            return (p, st), loss
+
+        keys = jax.random.split(key, self.local_steps)
+        (p, _), losses = jax.lax.scan(step, (params, opt_state), keys)
+        return p, jnp.mean(losses)
+
+    def _round(self, key, params, x, y, counts, *, batch_size: int):
+        n = self.cfg.num_nodes
+        key, k_act, k_cli = jax.random.split(key, 3)
+        from repro.core.async_sched import bernoulli_active
+
+        active = bernoulli_active(k_act, n, self.cfg.inactive_ratio)
+        client_keys = jax.random.split(k_cli, n)
+        bcast = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), params)
+        client_params, losses = jax.vmap(
+            partial(self._client_update, batch_size=batch_size)
+        )(client_keys, bcast, x, y, counts)
+
+        w = active * counts.astype(jnp.float32)
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
+
+        def agg(cp, old):
+            ws = w.reshape((n,) + (1,) * (cp.ndim - 1))
+            return jnp.sum(ws * cp, axis=0) + (1.0 - jnp.sum(w)) * old
+
+        new_params = jax.tree.map(agg, client_params, params)
+        loss = jnp.sum(losses * active) / jnp.maximum(jnp.sum(active), 1.0)
+        return key, new_params, loss
+
+    def train(self, key, x, y, counts, *, batch_size: int = 64, rounds: int | None = None):
+        rounds = rounds if rounds is not None else self.cfg.rounds
+        x, y, counts = jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
+        key, k_init = jax.random.split(key)
+        params = self.model.init(k_init)
+        history = []
+        for t in range(rounds):
+            key, params, loss = self._round_jit(key, params, x, y, counts, batch_size=batch_size)
+            history.append({"round": t, "loss": float(loss)})
+        return params, history

@@ -1,0 +1,40 @@
+"""Gossip parameter mixing — the paper's Step 2+3 as one primitive.
+
+Given stacked node parameters (leaves ``(N, ...)``) and the round's
+row-stochastic mixing matrix ``M`` (from ``topology.mixing_matrix``),
+compute ``W <- M @ W``.
+
+Three interchangeable implementations:
+  * ``gossip_mix_tree``    — pure jnp einsum per leaf (reference; CPU),
+  * ``gossip_mix_kernel``  — Pallas blocked kernel (repro.kernels),
+  * ``sharded_gossip_mix`` — shard_map over a node-sharded axis
+                             (repro.core.distributed) for fleet scale.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_weighted_mix
+
+PyTree = Any
+
+
+def gossip_mix_tree(stacked_params: PyTree, mix: jnp.ndarray) -> PyTree:
+    """Reference implementation (einsum per leaf)."""
+    return tree_weighted_mix(stacked_params, mix)
+
+
+def gossip_mix_kernel(stacked_params: PyTree, mix: jnp.ndarray, active=None) -> PyTree:
+    """Pallas-kernel implementation; identical math, VMEM-blocked."""
+    from repro.kernels.ops import gossip_mix as _kernel_mix
+
+    import jax
+
+    def mix_leaf(l):
+        flat = l.reshape(l.shape[0], -1)
+        out = _kernel_mix(mix, flat, active)
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(mix_leaf, stacked_params)

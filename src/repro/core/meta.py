@@ -1,0 +1,107 @@
+"""Meta-learning baselines: MAML and MetaSGD (paper §4.4).
+
+Tasks = patients.  MAML (Finn et al.) learns an initialization that
+adapts in a few inner SGD steps; MetaSGD (Li et al.) additionally learns
+a per-parameter inner learning rate.  The paper evaluates both WITHOUT
+test-time fine-tuning (population-model setting), which we reproduce:
+``population_params`` returns the meta-initialization directly.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Model
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+class MAML:
+    learn_inner_lr = False
+
+    def __init__(
+        self,
+        model: Model,
+        meta_optimizer: Optimizer,
+        *,
+        inner_lr: float = 1e-2,
+        inner_steps: int = 3,
+        loss_fn: Callable | None = None,
+    ):
+        self.model = model
+        self.meta_opt = meta_optimizer
+        self.inner_lr = inner_lr
+        self.inner_steps = inner_steps
+        self.loss_fn = loss_fn or (
+            lambda p, x, y: jnp.mean(jnp.square(model.apply(p, x) - y))
+        )
+        self._step_jit = jax.jit(self._meta_step, static_argnames=("batch_size",))
+
+    # -- inner adaptation ---------------------------------------------
+    def _adapt(self, params, lrs, key, x, y, count, batch_size):
+        def inner(carry, k):
+            p = carry
+            idx = jax.random.randint(k, (batch_size,), 0, jnp.maximum(count, 1))
+            grads = jax.grad(self.loss_fn)(p, x[idx], y[idx])
+            p = jax.tree.map(lambda pp, g, lr: pp - lr * g, p, grads, lrs)
+            return p, None
+
+        keys = jax.random.split(key, self.inner_steps)
+        adapted, _ = jax.lax.scan(inner, params, keys)
+        return adapted
+
+    # -- one meta step over a batch of tasks (= all patients) ----------
+    def _meta_step(self, key, params, lrs, meta_state, x, y, counts, *, batch_size: int):
+        n = x.shape[0]
+        keys = jax.random.split(key, 2 * n).reshape(n, 2, -1)
+
+        def task_loss(meta_params, meta_lrs, tkeys, xt, yt, ct):
+            adapted = self._adapt(meta_params, meta_lrs, tkeys[0], xt, yt, ct, batch_size)
+            idx = jax.random.randint(tkeys[1], (batch_size,), 0, jnp.maximum(ct, 1))
+            return self.loss_fn(adapted, xt[idx], yt[idx])
+
+        def mean_loss(meta_params, meta_lrs):
+            losses = jax.vmap(partial(task_loss, meta_params, meta_lrs))(
+                keys, x, y, counts
+            )
+            return jnp.mean(losses)
+
+        if self.learn_inner_lr:
+            loss, (gp, gl) = jax.value_and_grad(mean_loss, argnums=(0, 1))(params, lrs)
+            grads = {"params": gp, "lrs": gl}
+            packed = {"params": params, "lrs": lrs}
+            new_packed, meta_state = self.meta_opt.update(grads, meta_state, packed)
+            return new_packed["params"], new_packed["lrs"], meta_state, loss
+        loss, gp = jax.value_and_grad(mean_loss)(params, lrs)
+        new_params, meta_state = self.meta_opt.update(gp, meta_state, params)
+        return new_params, lrs, meta_state, loss
+
+    # -- driver ---------------------------------------------------------
+    def train(self, key, x, y, counts, *, batch_size: int = 64, steps: int = 100):
+        x, y, counts = jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
+        key, k_init = jax.random.split(key)
+        params = self.model.init(k_init)
+        lrs = jax.tree.map(lambda l: jnp.full_like(l, self.inner_lr), params)
+        meta_state = (
+            self.meta_opt.init({"params": params, "lrs": lrs})
+            if self.learn_inner_lr
+            else self.meta_opt.init(params)
+        )
+        history = []
+        for t in range(steps):
+            key, sub = jax.random.split(key)
+            params, lrs, meta_state, loss = self._step_jit(
+                sub, params, lrs, meta_state, x, y, counts, batch_size=batch_size
+            )
+            history.append({"round": t, "loss": float(loss)})
+        return params, lrs, history
+
+
+class MetaSGD(MAML):
+    """MAML + learnable per-parameter inner learning rates."""
+
+    learn_inner_lr = True

@@ -1,0 +1,46 @@
+"""'Personalized from population' (paper Fig 3): fine-tune the population
+model on one patient's own data, versus a from-scratch personalized model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Model
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+def personalize(
+    model: Model,
+    optimizer: Optimizer,
+    population_params: PyTree,
+    key,
+    x,
+    y,
+    *,
+    steps: int = 100,
+    batch_size: int = 32,
+) -> PyTree:
+    """Fine-tune population params on a single patient (paper: adjust γ)."""
+    x, y = jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(p, bx, by):
+        return jnp.mean(jnp.square(model.apply(p, bx) - by))
+
+    @jax.jit
+    def step(p, st, k):
+        idx = jax.random.randint(k, (batch_size,), 0, x.shape[0])
+        loss, grads = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
+        p, st = optimizer.update(grads, st, p)
+        return p, st, loss
+
+    params = population_params
+    st = optimizer.init(params)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        params, st, _ = step(params, st, sub)
+    return params

@@ -1,0 +1,60 @@
+"""Traditional supervised learning on MIXED data (paper Table 3 / §4.4):
+all patients' training windows pooled on one "server".  The privacy-free
+upper-bound baseline the paper compares FL against.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import Model
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+def train_supervised(
+    model: Model,
+    optimizer: Optimizer,
+    key,
+    x: np.ndarray,
+    y: np.ndarray,
+    *,
+    batch_size: int = 64,
+    steps: int = 500,
+    loss_fn: Callable | None = None,
+    val: tuple[np.ndarray, np.ndarray] | None = None,
+    eval_every: int = 50,
+):
+    """SGD on the pooled window set; returns (params, history)."""
+    loss_fn = loss_fn or (lambda p, bx, by: jnp.mean(jnp.square(model.apply(p, bx) - by)))
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+
+    @jax.jit
+    def step(p, st, k):
+        idx = jax.random.randint(k, (batch_size,), 0, x.shape[0])
+        loss, grads = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
+        p, st = optimizer.update(grads, st, p)
+        return p, st, loss
+
+    key, k_init = jax.random.split(key)
+    params = model.init(k_init)
+    st = optimizer.init(params)
+    history = []
+    best_val, best_params = np.inf, params
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        params, st, loss = step(params, st, sub)
+        rec = {"step": t, "loss": float(loss)}
+        if val is not None and (t + 1) % eval_every == 0:
+            pv = model.apply(params, jnp.asarray(val[0]))
+            vloss = float(jnp.mean(jnp.square(pv - jnp.asarray(val[1]))))
+            rec["val_loss"] = vloss
+            if vloss < best_val:
+                best_val, best_params = vloss, params
+        history.append(rec)
+    return (best_params if val is not None and np.isfinite(best_val) else params), history

@@ -1,0 +1,130 @@
+"""Communication topologies (paper §3.3) as adjacency / mixing matrices.
+
+A topology yields, per round t, an adjacency matrix A_t in {0,1}^(N,N)
+(no self loops).  Combined with the round's active mask, it becomes the
+row-stochastic mixing matrix M_t of Algorithm 1 lines 7-9:
+
+    M[n]  = uniform over ({n} ∪ active neighbours of n, capped at B)    if n active
+    M[n]  = e_n (identity row — keeps its stale model)                   if n inactive
+
+``mixing_matrix`` is pure-jnp so whole FL rounds jit/scan; the static
+topologies (ring, cluster, star, full) are constants, the random topology
+re-samples each round from a PRNG key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ring_adjacency(n: int) -> jnp.ndarray:
+    """Each node talks to its two ring neighbours."""
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        a[i, (i + 1) % n] = 1
+        a[i, (i - 1) % n] = 1
+    if n <= 2:
+        np.fill_diagonal(a, 0)
+    return jnp.asarray(a)
+
+
+def cluster_adjacency(n: int, cluster_size: int = 4) -> jnp.ndarray:
+    """Fully-connected clusters arranged on a ring; one bridge node links
+    each cluster to the next (SWIFT-style cluster-ring)."""
+    a = np.zeros((n, n), np.float32)
+    n_clusters = max(1, -(-n // cluster_size))
+    for c in range(n_clusters):
+        lo, hi = c * cluster_size, min((c + 1) * cluster_size, n)
+        for i in range(lo, hi):
+            for j in range(lo, hi):
+                if i != j:
+                    a[i, j] = 1
+        # bridge: last member of this cluster <-> first member of next
+        nxt = ((c + 1) % n_clusters) * cluster_size
+        if hi - 1 != nxt:
+            a[hi - 1, nxt] = 1
+            a[nxt, hi - 1] = 1
+    return jnp.asarray(a)
+
+
+def star_adjacency(n: int) -> jnp.ndarray:
+    """FedAvg's topology: node 0 is the server."""
+    a = np.zeros((n, n), np.float32)
+    a[0, 1:] = 1
+    a[1:, 0] = 1
+    return jnp.asarray(a)
+
+
+def full_adjacency(n: int) -> jnp.ndarray:
+    return jnp.ones((n, n), jnp.float32) - jnp.eye(n, dtype=jnp.float32)
+
+
+def random_adjacency(key, n: int, degree: int) -> jnp.ndarray:
+    """Time-varying random graph: each node draws ``degree`` distinct
+    peers; symmetrized (paper: up to B random connections per round)."""
+    # score-based sampling: peers = top-degree of random scores (excl. self)
+    scores = jax.random.uniform(key, (n, n))
+    scores = scores - 2.0 * jnp.eye(n)  # never pick self
+    _, idx = jax.lax.top_k(scores, degree)
+    a = jnp.zeros((n, n), jnp.float32)
+    rows = jnp.repeat(jnp.arange(n), degree)
+    a = a.at[rows, idx.reshape(-1)].set(1.0)
+    return jnp.maximum(a, a.T)  # undirected
+
+
+def static_adjacency(topology: str, n: int, cluster_size: int = 4) -> jnp.ndarray | None:
+    if topology == "ring":
+        return ring_adjacency(n)
+    if topology == "cluster":
+        return cluster_adjacency(n, cluster_size)
+    if topology == "star":
+        return star_adjacency(n)
+    if topology == "full":
+        return full_adjacency(n)
+    if topology == "random":
+        return None  # sampled per round
+    raise KeyError(f"unknown topology {topology!r}")
+
+
+def round_adjacency(
+    topology: str, n: int, key, comm_batch: int, cluster_size: int = 4
+) -> jnp.ndarray:
+    """Adjacency for round t (jnp; random resamples, others constant)."""
+    static = static_adjacency(topology, n, cluster_size)
+    if static is not None:
+        return static
+    return random_adjacency(key, n, min(comm_batch, n - 1))
+
+
+def mixing_matrix(
+    adjacency: jnp.ndarray, active: jnp.ndarray, comm_batch: int
+) -> jnp.ndarray:
+    """Algorithm 1 lines 7-9 as a row-stochastic matrix.
+
+    ``active``: (N,) {0,1}.  Only active nodes mix, and they only count
+    *active* neighbours; each node keeps at most ``comm_batch`` neighbours
+    (we keep the B highest-index active neighbours deterministically via a
+    cumulative-count mask so the op stays jittable).
+    """
+    n = adjacency.shape[0]
+    act = active.astype(jnp.float32)
+    # neighbours that are active
+    neigh = adjacency * act[None, :]
+    # cap at comm_batch per row (keep first B active neighbours)
+    csum = jnp.cumsum(neigh, axis=1)
+    neigh = neigh * (csum <= comm_batch)
+    # self weight always included for active rows
+    w = neigh + jnp.eye(n, dtype=jnp.float32)
+    denom = jnp.sum(w, axis=1, keepdims=True)
+    mix_active = w / denom
+    eye = jnp.eye(n, dtype=jnp.float32)
+    return act[:, None] * mix_active + (1 - act)[:, None] * eye
+
+
+def spectral_gap(mix: jnp.ndarray) -> float:
+    """1 - |lambda_2| of a (symmetric-ish) mixing matrix — the standard
+    gossip convergence-rate proxy, reported by the topology benchmark."""
+    lam = np.linalg.eigvals(np.asarray(mix, np.float64))
+    lam = np.sort(np.abs(lam))[::-1]
+    return float(1.0 - (lam[1] if len(lam) > 1 else 0.0))

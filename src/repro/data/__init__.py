@@ -1,0 +1,3 @@
+from repro.data.synth import DATASET_SPECS, generate_patient_series, generate_dataset
+from repro.data.windowing import make_windows, split_by_time, zscore_stats, normalize
+from repro.data.pipeline import PatientData, FederatedData, load_federated_dataset, batch_iterator

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: blocked gossip parameter mixing (the paper's
+Step 2+3 — ``W <- M @ W`` with a row-stochastic mixing matrix).
+
+TPU adaptation (DESIGN.md §3): gossip is expressed as a dense mixing
+contraction rather than point-to-point sends.  The contraction is
+memory-bound (N is the federation size, tiny against D, the flattened
+parameter size), so the kernel's job is to stream the (N, D) parameter
+matrix through VMEM exactly once in MXU-aligned D-tiles while the (N, N)
+mixing matrix stays VMEM-resident, and to fuse the active-mask select so
+inactive nodes' rows are copies rather than flops.
+
+Grid: one program per D-tile.  BlockSpecs:
+  mix    (N, N)        — replicated to every program (index_map -> (0, 0)),
+  w      (N, TILE_D)   — the program's slice of the parameter matrix,
+  active (N, 1)        — replicated,
+  out    (N, TILE_D).
+
+N is padded to the 8-lane sublane multiple by the wrapper (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_D = 512  # lane-dim tile: multiple of 128 (MXU), 4 regs deep
+
+
+def _kernel(mix_ref, w_ref, act_ref, out_ref):
+    mix = mix_ref[...]          # (N, N) f32, VMEM-resident
+    w = w_ref[...]              # (N, TILE_D)
+    act = act_ref[...]          # (N, 1)
+    mixed = jnp.dot(
+        mix, w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    out = act * mixed + (1.0 - act) * w.astype(jnp.float32)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix_pallas(
+    mix: jnp.ndarray,
+    w: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """mix (N,N) f32, w (N,D), active (N,) -> (N,D).  D % TILE_D == 0
+    (ops.py pads)."""
+    n, d = w.shape
+    assert d % TILE_D == 0, d
+    grid = (d // TILE_D,)
+    act2 = active.astype(jnp.float32).reshape(n, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), w.dtype),
+        interpret=interpret,
+    )(mix.astype(jnp.float32), w, act2)

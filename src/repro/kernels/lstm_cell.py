@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused LSTM cell — the paper's per-node compute
+hot spot (§3.2; the model every patient device trains).
+
+Fuses the two matmuls (x@Wx + h@Wh), bias add, and the 4-gate
+nonlinearity + state update into one kernel, so per step the gate
+pre-activations never round-trip to HBM.  The sequential time loop stays
+a ``jax.lax.scan`` at the JAX level (TPU idiom: scan-of-fused-cell, see
+DESIGN.md §3).
+
+Grid: (B tiles, H tiles).  The 4H gate dim is tiled per H-tile: each
+program computes its (TILE_B, TILE_H) slice of all four gates, reading
+the (I, 4H) / (H, 4H) weight columns for its gate slice.  Weights are
+laid out gate-major as (I, 4, H) so a gate slice is contiguous.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+TILE_H = 128
+
+
+def _kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    x = x_ref[...].astype(jnp.float32)        # (TB, I)
+    h = h_ref[...].astype(jnp.float32)        # (TB, H) — full H for the matmul
+    c = c_ref[...].astype(jnp.float32)        # (TB, TH)
+    wx = wx_ref[...].astype(jnp.float32)      # (I, 4, TH)
+    wh = wh_ref[...].astype(jnp.float32)      # (H, 4, TH)
+    b = b_ref[...].astype(jnp.float32)        # (4, TH)
+
+    i_, f_, g_, o_ = [
+        jnp.dot(x, wx[:, gate, :], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh[:, gate, :], preferred_element_type=jnp.float32)
+        + b[gate]
+        for gate in range(4)
+    ]
+    i = jax.nn.sigmoid(i_)
+    f = jax.nn.sigmoid(f_)
+    g = jnp.tanh(g_)
+    o = jax.nn.sigmoid(o_)
+    c_new = f * c + i * g
+    h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_cell_pallas(x_t, h, c, wx, wh, b, *, interpret: bool = True):
+    """x_t (B, I), h/c (B, H), wx (I, 4H), wh (H, 4H), b (4H,).
+    B % TILE_B == 0 and H % TILE_H == 0 (ops.py pads)."""
+    bsz, isz = x_t.shape
+    hsz = h.shape[1]
+    assert bsz % TILE_B == 0 and hsz % TILE_H == 0, (bsz, hsz)
+    wx4 = wx.reshape(isz, 4, hsz)
+    wh4 = wh.reshape(hsz, 4, hsz)
+    b4 = b.reshape(4, hsz)
+    grid = (bsz // TILE_B, hsz // TILE_H)
+    h_new, c_new = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, isz), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((TILE_B, hsz), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((TILE_B, TILE_H), lambda bi, hi: (bi, hi)),
+            pl.BlockSpec((isz, 4, TILE_H), lambda bi, hi: (0, 0, hi)),
+            pl.BlockSpec((hsz, 4, TILE_H), lambda bi, hi: (0, 0, hi)),
+            pl.BlockSpec((4, TILE_H), lambda bi, hi: (0, hi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_B, TILE_H), lambda bi, hi: (bi, hi)),
+            pl.BlockSpec((TILE_B, TILE_H), lambda bi, hi: (bi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hsz), h.dtype),
+            jax.ShapeDtypeStruct((bsz, hsz), c.dtype),
+        ],
+        interpret=interpret,
+    )(x_t, h, c, wx4, wh4, b4)
+    return h_new, c_new

@@ -1,0 +1,65 @@
+"""Jitted public wrappers for the Pallas kernels: padding to tile
+multiples, dtype plumbing, and CPU (interpret) / TPU (compiled) dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gossip_mix import TILE_D, gossip_mix_pallas
+from repro.kernels.lstm_cell import TILE_B, TILE_H, lstm_cell_pallas
+from repro.kernels.swa_attention import TILE_Q, swa_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def gossip_mix(mix: jnp.ndarray, w: jnp.ndarray, active=None) -> jnp.ndarray:
+    """Row-stochastic gossip mix ``out = mix @ w`` with active-mask fuse.
+
+    mix (N, N), w (N, D) any float dtype, active optional (N,).
+    Pads N to the 8-sublane multiple and D to TILE_D; interpret mode on
+    CPU (bit-correctness tests), compiled on TPU.
+    """
+    n, d = w.shape
+    if active is None:
+        active = jnp.ones((n,), jnp.float32)
+    n_pad = (-n) % 8
+    wp = _pad_to(w, 0, 8)
+    mp = _pad_to(_pad_to(mix, 0, 8), 1, 8)
+    ap = _pad_to(active.astype(jnp.float32), 0, 8)
+    wp = _pad_to(wp, 1, TILE_D)
+    out = gossip_mix_pallas(mp, wp, ap, interpret=not _on_tpu())
+    return out[:n, :d]
+
+
+def lstm_cell(x_t, h, c, wx, wh, b):
+    """Fused LSTM cell step (see kernels/lstm_cell.py)."""
+    bsz, hsz = h.shape
+    xb = _pad_to(x_t, 0, TILE_B)
+    hb = _pad_to(h, 0, TILE_B)
+    cb = _pad_to(c, 0, TILE_B)
+    if hsz % TILE_H:
+        # hidden padding changes gate block layout; fall back to reference
+        from repro.kernels.ref import lstm_cell_ref
+
+        return lstm_cell_ref(x_t, h, c, wx, wh, b)
+    h_new, c_new = lstm_cell_pallas(xb, hb, cb, wx, wh, b, interpret=not _on_tpu())
+    return h_new[:bsz], c_new[:bsz]
+
+
+def swa_attention(q, k, v, *, window: int) -> jnp.ndarray:
+    """Banded sliding-window flash attention.  q/k/v (B, S, H, hd) with
+    kv heads pre-repeated; S must divide by TILE_Q (128)."""
+    assert q.shape[1] % TILE_Q == 0, q.shape
+    return swa_attention_pallas(q, k, v, window=window, interpret=not _on_tpu())

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(mix: jnp.ndarray, w: jnp.ndarray, active=None) -> jnp.ndarray:
+    """Row-stochastic gossip mix: out = mix @ w, inactive rows copied.
+
+    mix: (N, N) f32; w: (N, D); active: optional (N,) {0,1} — when given,
+    inactive rows bypass the contraction entirely (pure copy).
+    """
+    out = jnp.einsum("nm,md->nd", mix.astype(jnp.float32), w.astype(jnp.float32))
+    if active is not None:
+        a = active.astype(jnp.float32)[:, None]
+        out = a * out + (1 - a) * w.astype(jnp.float32)
+    return out.astype(w.dtype)
+
+
+def lstm_cell_ref(x_t, h, c, wx, wh, b):
+    """Fused LSTM cell (gates i, f, g, o).  Shapes:
+    x_t (B, I), h/c (B, H), wx (I, 4H), wh (H, 4H), b (4H,)."""
+    z = (
+        x_t.astype(jnp.float32) @ wx.astype(jnp.float32)
+        + h.astype(jnp.float32) @ wh.astype(jnp.float32)
+        + b.astype(jnp.float32)
+    )
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)
+
+
+def swa_attention_ref(q, k, v, *, window: int) -> jnp.ndarray:
+    """Causal sliding-window attention oracle.  q/k/v: (B, S, H, hd)
+    (kv heads already repeated to H).  Positions attend to
+    (pos-window, pos]."""
+    b, s, h, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * (hd**-0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: sliding-window flash attention (banded, online
+softmax) — the long-context serving hot spot for the Mistral-family and
+hybrid architectures (long_500k / prefill_32k shapes).
+
+TPU adaptation: FlashAttention's CUDA thread-block tiling becomes a
+Pallas grid over (batch*heads, q tiles, band kv tiles) with VMEM
+scratch accumulators.  The sliding window is enforced STRUCTURALLY: each
+q tile only visits the ceil(window/TILE_K)+1 kv tiles of its diagonal
+band (index_map clamps at 0), so cost is O(S * window), not O(S^2) —
+the same banding as the pure-JAX path, but with explicit VMEM residency
+and no (S, TILE_K) score round-trips to HBM.
+
+Softmax statistics (m, l) and the output accumulator live in VMEM
+scratch across the innermost (kv) grid dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_Q = 128
+TILE_K = 128
+NEG_INF = -1e30
+
+
+def _band_blocks(window: int) -> int:
+    return -(-window // TILE_K) + 1
+
+
+def _kv_index(qi, j, nband):
+    return jnp.maximum(qi - nband + 1 + j, 0)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, window: int, nband: int):
+    j = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (TILE_Q, hd)
+    k = k_ref[0].astype(jnp.float32)  # (TILE_K, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    hd = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (hd**-0.5)
+
+    kidx = _kv_index(qi, j, nband)
+    q_pos = qi * TILE_Q + jax.lax.broadcasted_iota(jnp.int32, (TILE_Q, TILE_K), 0)
+    k_pos = kidx * TILE_K + jax.lax.broadcasted_iota(jnp.int32, (TILE_Q, TILE_K), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    # clamped duplicate visits (qi < nband-1 revisit kv block 0): drop them
+    first_j = jnp.maximum(nband - 1 - qi, 0)
+    mask = mask & (j >= first_j)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                     # (TILE_Q, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)
+    l_new = l_prev * scale + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * scale + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == nband - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def swa_attention_pallas(q, k, v, *, window: int, interpret: bool = True):
+    """q/k/v: (B, S, H, hd) (kv already repeated to H heads).
+    S % TILE_Q == 0; causal sliding-window attention."""
+    b, s, h, hd = q.shape
+    assert s % TILE_Q == 0 and s % TILE_K == 0, s
+    nband = _band_blocks(window)
+    nq = s // TILE_Q
+
+    # (B*H, S, hd) layout: heads fold into the grid's leading dim
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    kernel = functools.partial(_kernel, window=window, nband=nband)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nband),
+        in_specs=[
+            pl.BlockSpec((1, TILE_Q, hd), lambda bh, qi, j: (bh, qi, 0)),
+            pl.BlockSpec(
+                (1, TILE_K, hd),
+                lambda bh, qi, j: (bh, _kv_index(qi, j, nband), 0),
+            ),
+            pl.BlockSpec(
+                (1, TILE_K, hd),
+                lambda bh, qi, j: (bh, _kv_index(qi, j, nband), 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_Q, hd), lambda bh, qi, j: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((TILE_Q, hd), jnp.float32),
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests run with
+the real single device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data x 16 model).  Multi-pod: 2 pods of
+    256 (pod x data x model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int | None = None):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = devices or len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_gossip_dp_mesh(*, nodes: int = 4, multi_pod: bool = False):
+    """Mesh view for gossip data-parallelism (DESIGN.md §4): the data
+    axis is split into (node, data) so each federated node is a
+    ``data/node``-way data-parallel group.  Same device order as the
+    production mesh."""
+    if multi_pod:
+        # nodes = 2 pods x (nodes // 2) groups
+        per_pod = max(nodes // 2, 1)
+        return jax.make_mesh(
+            (2, per_pod, 16 // per_pod, 16), ("pod", "node", "data", "model")
+        )
+    return jax.make_mesh((nodes, 16 // nodes, 16), ("node", "data", "model"))

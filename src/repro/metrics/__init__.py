@@ -1,0 +1,8 @@
+from repro.metrics.glucose import (
+    rmse,
+    mard,
+    mae,
+    grmse,
+    time_lag_minutes,
+    all_metrics,
+)

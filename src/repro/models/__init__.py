@@ -1,0 +1,13 @@
+from repro.models.lstm import LSTMModel
+from repro.models.linear import LinearModel
+from repro.models.nbeats import NBeatsModel
+from repro.models.nhits import NHiTSModel
+from repro.models.gbt import GradientBoostedTrees
+from repro.models.base import Model, get_model
+
+MODEL_REGISTRY = {
+    "lstm": LSTMModel,
+    "lr": LinearModel,
+    "nbeats": NBeatsModel,
+    "nhits": NHiTSModel,
+}

@@ -1,0 +1,30 @@
+"""Uniform functional model interface for the glucose predictors.
+
+A Model is a pair of pure functions:
+  init(key)            -> params pytree
+  apply(params, x)     -> (B,) prediction from (B, L) history
+
+so every trainer (supervised, FedAvg, GluADFL, MAML...) is model-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    name: str
+    init: Callable[[Any], PyTree]
+    apply: Callable[[PyTree, jnp.ndarray], jnp.ndarray]
+
+
+def get_model(name: str, history_len: int = 12, hidden: int = 128, **kw) -> Model:
+    from repro.models import MODEL_REGISTRY
+
+    cls = MODEL_REGISTRY[name]
+    return cls(history_len=history_len, hidden=hidden, **kw).as_model()

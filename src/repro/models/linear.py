@@ -1,0 +1,40 @@
+"""Linear-regression baseline (paper's LR).
+
+Trainable by SGD like every other model, plus a closed-form ridge solve
+(`fit_closed_form`) used by the supervised-baseline benchmark for speed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Model
+
+
+@dataclass(frozen=True)
+class LinearModel:
+    history_len: int = 12
+    hidden: int = 0  # unused; uniform ctor signature
+
+    def init(self, key):
+        return {
+            "w": jnp.zeros((self.history_len,)),
+            "b": jnp.zeros(()),
+        }
+
+    def apply(self, params, x):
+        return x @ params["w"] + params["b"]
+
+    def as_model(self) -> Model:
+        return Model("lr", self.init, self.apply)
+
+
+def fit_closed_form(x: jnp.ndarray, y: jnp.ndarray, l2: float = 1e-3):
+    """Ridge regression: returns the LinearModel params pytree."""
+    n, d = x.shape
+    xb = jnp.concatenate([x, jnp.ones((n, 1), x.dtype)], axis=1)
+    gram = xb.T @ xb + l2 * jnp.eye(d + 1, dtype=x.dtype)
+    coef = jnp.linalg.solve(gram, xb.T @ y)
+    return {"w": coef[:d], "b": coef[d]}

@@ -1,0 +1,86 @@
+"""Single-layer LSTM glucose predictor (the paper's model, §3.2).
+
+A univariate CGM history (B, L) is embedded per step, run through one
+LSTM layer (lax.scan of a fused cell), and the last hidden state is
+projected to the H-step-ahead glucose level.
+
+The cell math lives in ``repro.kernels.lstm_cell``'s reference path so the
+Pallas kernel and the model share one definition; the model defaults to
+the pure-jnp path (CPU) and can be switched to the Pallas kernel with
+``use_kernel=True`` (interpret mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Model
+
+
+def lstm_cell_ref(x_t, h, c, wx, wh, b):
+    """One LSTM step: gates ordered (i, f, g, o).  Shapes:
+    x_t (B, I), h/c (B, H), wx (I, 4H), wh (H, 4H), b (4H,).
+    """
+    z = x_t @ wx + h @ wh + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+@dataclass(frozen=True)
+class LSTMModel:
+    history_len: int = 12
+    hidden: int = 128
+    input_size: int = 1
+    use_kernel: bool = False
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        H, I = self.hidden, self.input_size
+        scale_x = 1.0 / jnp.sqrt(I)
+        scale_h = 1.0 / jnp.sqrt(H)
+        b = jnp.zeros((4 * H,))
+        # forget-gate bias 1.0 (standard LSTM init)
+        b = b.at[H : 2 * H].set(1.0)
+        return {
+            "wx": jax.random.normal(k1, (I, 4 * H)) * scale_x,
+            "wh": jax.random.normal(k2, (H, 4 * H)) * scale_h,
+            "b": b,
+            "w_out": jax.random.normal(k3, (H, 1)) * scale_h,
+            "b_out": jnp.zeros((1,)),
+        }
+
+    def apply(self, params, x):
+        """x: (B, L) normalized glucose -> (B,) prediction."""
+        B, L = x.shape
+        xs = x[..., None]  # (B, L, 1) univariate input
+        h = jnp.zeros((B, self.hidden), x.dtype)
+        c = jnp.zeros((B, self.hidden), x.dtype)
+
+        if self.use_kernel:
+            from repro.kernels.ops import lstm_cell as cell_op
+
+            def step(carry, x_t):
+                h, c = carry
+                h, c = cell_op(x_t, h, c, params["wx"], params["wh"], params["b"])
+                return (h, c), None
+        else:
+
+            def step(carry, x_t):
+                h, c = carry
+                h, c = lstm_cell_ref(x_t, h, c, params["wx"], params["wh"], params["b"])
+                return (h, c), None
+
+        (h, c), _ = jax.lax.scan(step, (h, c), jnp.swapaxes(xs, 0, 1))
+        out = h @ params["w_out"] + params["b_out"]
+        return out[:, 0]
+
+    def as_model(self) -> Model:
+        return Model("lstm", self.init, self.apply)

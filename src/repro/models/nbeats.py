@@ -1,0 +1,71 @@
+"""N-BEATS (Oreshkin et al., ICLR'20) for single-point BGLP.
+
+Generic-basis N-BEATS: a stack of fully-connected blocks; each block
+emits a *backcast* (subtracted from the residual input) and a *forecast*
+(accumulated).  We use the generic block form (no interpretable basis)
+with a 1-point forecast head, matching the paper's use of N-BEATS as a
+point-prediction baseline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Model
+
+
+def _dense_init(key, n_in, n_out):
+    k1, k2 = jax.random.split(key)
+    lim = 1.0 / jnp.sqrt(n_in)
+    return {
+        "w": jax.random.uniform(k1, (n_in, n_out), minval=-lim, maxval=lim),
+        "b": jnp.zeros((n_out,)),
+    }
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+@dataclass(frozen=True)
+class NBeatsModel:
+    history_len: int = 12
+    hidden: int = 128
+    num_blocks: int = 3
+    num_layers: int = 3  # FC layers per block
+
+    def init(self, key):
+        blocks = []
+        for b in range(self.num_blocks):
+            key, sub = jax.random.split(key)
+            ks = jax.random.split(sub, self.num_layers + 2)
+            layers = [
+                _dense_init(ks[0], self.history_len, self.hidden)
+            ] + [
+                _dense_init(ks[i], self.hidden, self.hidden)
+                for i in range(1, self.num_layers)
+            ]
+            blocks.append(
+                {
+                    "layers": layers,
+                    "backcast": _dense_init(ks[-2], self.hidden, self.history_len),
+                    "forecast": _dense_init(ks[-1], self.hidden, 1),
+                }
+            )
+        return {"blocks": blocks}
+
+    def apply(self, params, x):
+        residual = x
+        forecast = jnp.zeros((x.shape[0], 1), x.dtype)
+        for blk in params["blocks"]:
+            h = residual
+            for lyr in blk["layers"]:
+                h = jax.nn.relu(_dense(lyr, h))
+            residual = residual - _dense(blk["backcast"], h)
+            forecast = forecast + _dense(blk["forecast"], h)
+        return forecast[:, 0]
+
+    def as_model(self) -> Model:
+        return Model("nbeats", self.init, self.apply)

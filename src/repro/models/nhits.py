@@ -1,0 +1,82 @@
+"""NHiTS (Challu et al., AAAI'23) for single-point BGLP.
+
+Hierarchical interpolation + multi-rate input pooling: each stack sees a
+max-pooled (coarsened) view of the residual input, emits low-dimensional
+backcast/forecast coefficients, and linearly interpolates them back to
+full resolution.  Pool sizes decrease across stacks (coarse -> fine),
+specializing stacks to frequency bands, as in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Model
+from repro.models.nbeats import _dense, _dense_init
+
+
+def _maxpool1d(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(B, L) -> (B, ceil(L/k)) max pooling with edge padding."""
+    if k <= 1:
+        return x
+    B, L = x.shape
+    pad = (-L) % k
+    xp = jnp.pad(x, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    return xp.reshape(B, -1, k).max(axis=-1)
+
+
+def _interp1d(coef: jnp.ndarray, out_len: int) -> jnp.ndarray:
+    """(B, C) -> (B, out_len) linear interpolation of knot values."""
+    B, C = coef.shape
+    if C == out_len:
+        return coef
+    pos = jnp.linspace(0.0, C - 1.0, out_len)
+    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, C - 1)
+    hi = jnp.clip(lo + 1, 0, C - 1)
+    frac = pos - lo
+    return coef[:, lo] * (1 - frac) + coef[:, hi] * frac
+
+
+@dataclass(frozen=True)
+class NHiTSModel:
+    history_len: int = 12
+    hidden: int = 128
+    num_layers: int = 2
+    pool_sizes: tuple = (4, 2, 1)      # coarse -> fine stacks
+    backcast_knots: tuple = (4, 6, 12)  # interpolation knots per stack
+
+    def init(self, key):
+        stacks = []
+        for pool, knots in zip(self.pool_sizes, self.backcast_knots):
+            key, sub = jax.random.split(key)
+            in_len = -(-self.history_len // pool)  # ceil
+            ks = jax.random.split(sub, self.num_layers + 2)
+            layers = [_dense_init(ks[0], in_len, self.hidden)] + [
+                _dense_init(ks[i], self.hidden, self.hidden)
+                for i in range(1, self.num_layers)
+            ]
+            stacks.append(
+                {
+                    "layers": layers,
+                    "backcast": _dense_init(ks[-2], self.hidden, knots),
+                    "forecast": _dense_init(ks[-1], self.hidden, 1),
+                }
+            )
+        return {"stacks": stacks}
+
+    def apply(self, params, x):
+        residual = x
+        forecast = jnp.zeros((x.shape[0], 1), x.dtype)
+        for stack, pool in zip(params["stacks"], self.pool_sizes):
+            h = _maxpool1d(residual, pool)
+            for lyr in stack["layers"]:
+                h = jax.nn.relu(_dense(lyr, h))
+            back = _interp1d(_dense(stack["backcast"], h), self.history_len)
+            residual = residual - back
+            forecast = forecast + _dense(stack["forecast"], h)
+        return forecast[:, 0]
+
+    def as_model(self) -> Model:
+        return Model("nhits", self.init, self.apply)

@@ -1,0 +1,5 @@
+from repro.nn.layers import rms_norm, layer_norm, dense, embed, rope, pad_vocab
+from repro.nn.attention import gqa_attention, decode_attention, KVCache
+from repro.nn.moe import moe_ffn
+from repro.nn.ssm import ssd_forward, ssd_decode_step
+from repro.nn.rglru import rglru_forward, rglru_decode_step

@@ -1,0 +1,224 @@
+"""GQA attention: plain, blocked-flash (long-context), and decode paths.
+
+  * ``gqa_attention`` — self-attention over a full sequence (train /
+    prefill).  For short sequences a plain masked softmax; above
+    ``flash_threshold`` a pure-JAX blocked flash attention (lax.scan over
+    KV blocks with an online softmax) so 32k+ prefill never materializes
+    (S, S) scores.  Supports causal masking and sliding windows; with a
+    window, KV blocks entirely outside every query's window are skipped
+    structurally (banded iteration), which is what makes long-context
+    sliding-window prefill sub-quadratic.
+  * ``decode_attention`` — one-token query against a KV cache.
+  * ``KVCache`` — append-only cache for full attention, ring buffer for
+    sliding windows (so a 500k-context SWA decode stores only the window).
+
+The Pallas kernel in ``repro.kernels.swa_attention`` implements the same
+blocked computation with explicit VMEM BlockSpecs; this module is the
+lowering-friendly XLA reference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
+    """(B, S, K, hd) -> (B, S, K*q_per_kv, hd) by repetition."""
+    if q_per_kv == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, q_per_kv, hd)).reshape(
+        b, s, kh * q_per_kv, hd
+    )
+
+
+def plain_attention(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
+    """Reference masked attention.  q: (B,Sq,H,hd), k/v: (B,Skv,K,hd)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    k = _repeat_kv(k, h // kh)
+    v = _repeat_kv(v, h // kh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (hd**-0.5)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0, block: int = 1024):
+    """Blocked flash attention (online softmax), scan over KV blocks.
+
+    Never materializes (Sq, Skv); peak extra memory is (B, H, Sq, block).
+    With ``window > 0`` the scan body still visits every block index but
+    fully-masked blocks contribute zero; the *banded* variant (used for
+    very long SWA prefill) instead restricts the scan to the diagonal
+    band — see ``banded_flash_attention``.
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    skv = k.shape[1]
+    assert skv % block == 0 or skv < block, (skv, block)
+    block = min(block, skv)
+    nblocks = -(-skv // block)
+    qpk = h // kh
+
+    from repro.arch.sharding import constrain_attn
+
+    qf = q.astype(jnp.float32) * (hd**-0.5)
+    # (B, H, Sq, hd) layout for the scan
+    qf = constrain_attn(qf.transpose(0, 2, 1, 3), "bhsd")
+
+    def body(carry, blk_idx):
+        acc, m_prev, l_prev = carry
+        start = blk_idx * block
+        kb = jax.lax.dynamic_slice_in_dim(k, start, block, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, block, axis=1)
+        kb = _repeat_kv(kb, qpk).transpose(0, 2, 1, 3).astype(jnp.float32)
+        vb = _repeat_kv(vb, qpk).transpose(0, 2, 1, 3).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb)  # (B,H,Sq,block)
+        qpos = jnp.arange(sq)[:, None]
+        kpos = start + jnp.arange(block)[None, :]
+        mask = jnp.ones((sq, block), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m_prev - m_new)
+        l_new = l_prev * scale + p.sum(axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        acc = constrain_attn(acc, "bhsd")
+        return (acc, constrain_attn(m_new, "bhs"), constrain_attn(l_new, "bhs")), None
+
+    from repro.nn.unroll import unroll_enabled
+
+    acc0 = constrain_attn(jnp.zeros((b, h, sq, hd), jnp.float32), "bhsd")
+    m0 = constrain_attn(jnp.full((b, h, sq), NEG_INF, jnp.float32), "bhs")
+    l0 = constrain_attn(jnp.zeros((b, h, sq), jnp.float32), "bhs")
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), jnp.arange(nblocks),
+        unroll=nblocks if unroll_enabled() else 1,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def banded_flash_attention(q, k, v, *, window: int, block: int = 1024):
+    """Sliding-window causal attention visiting ONLY the diagonal band.
+
+    Queries are processed in blocks of ``block``; each query block
+    attends to ceil(window/block)+1 KV blocks.  Cost O(S * window), the
+    sub-quadratic path for long_500k-class prefill.
+    """
+    b, sq, h, hd = q.shape
+    assert sq % block == 0, (sq, block)
+    nq = sq // block
+    kv_blocks = -(-window // block) + 1
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * block, block, axis=1)
+        lo_block = jnp.maximum(qi - kv_blocks + 1, 0)
+        start = lo_block * block
+        span = kv_blocks * block
+        kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        out = plain_attention(
+            qb, kb, vb, causal=True, window=window, q_offset=(qi - lo_block) * block
+        )
+        return out
+
+    from repro.nn.unroll import unroll_enabled
+
+    if unroll_enabled():
+        outs = jnp.stack([q_block(jnp.asarray(i)) for i in range(nq)])
+    else:
+        outs = jax.lax.map(q_block, jnp.arange(nq))  # (nq, B, block, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def gqa_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    flash_threshold: int = 2048,
+    block: int = 1024,
+):
+    """Dispatch to the right self-attention path (see module docstring)."""
+    skv, sq = k.shape[1], q.shape[1]
+    if skv <= flash_threshold:
+        return plain_attention(q, k, v, causal=causal, window=window)
+    band_span = (-(-window // block) + 1) * block if window > 0 else 0
+    if window > 0 and sq == skv and sq % block == 0 and block <= window and band_span < sq:
+        return banded_flash_attention(q, k, v, window=window, block=block)
+    return flash_attention(q, k, v, causal=causal, window=window, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class KVCache:
+    """KV cache for decode.  Full attention: append-only of length
+    max_len.  Sliding window: ring buffer of length window."""
+
+    k: jnp.ndarray          # (B, C, K, hd)
+    v: jnp.ndarray          # (B, C, K, hd)
+    pos: jnp.ndarray        # scalar int32 — tokens decoded so far
+
+    @staticmethod
+    def init(batch: int, capacity: int, kv_heads: int, head_dim: int, dtype) -> "KVCache":
+        shape = (batch, capacity, kv_heads, head_dim)
+        return KVCache(
+            k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+    def append(self, k_new, v_new) -> "KVCache":
+        """Append one token's K/V (B, 1, K, hd); ring semantics when full."""
+        cap = self.k.shape[1]
+        slot = self.pos % cap
+        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), slot, axis=1)
+        return KVCache(k=k, v=v, pos=self.pos + 1)
+
+
+def decode_attention(q, cache: KVCache, *, window: int = 0):
+    """One-step attention: q (B, 1, H, hd) against the cache (post-append).
+
+    Masks out unwritten slots; for ring caches every written slot is in
+    the window by construction.
+    """
+    b, one, h, hd = q.shape
+    cap = cache.k.shape[1]
+    kh = cache.k.shape[2]
+    k = _repeat_kv(cache.k, h // kh)
+    v = _repeat_kv(cache.v, h // kh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (hd**-0.5)
+    slots = jnp.arange(cap)
+    valid = slots < cache.pos  # pos already includes the appended token
+    if window > 0:
+        # ring buffer: every retained slot is within the window — only
+        # unwritten slots are invalid (cap == window)
+        pass
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

@@ -1,0 +1,106 @@
+"""Basic transformer layers (pure functions, params-as-pytrees).
+
+Conventions:
+  * master params float32, compute dtype per call (usually bf16),
+  * activations (B, S, D), attention heads laid out (B, S, H, head_dim),
+  * all vocab-sized dims are padded to a multiple of 128 so they shard
+    evenly on any mesh axis (``pad_vocab``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_vocab(v: int, multiple: int = 128) -> int:
+    return -(-v // multiple) * multiple
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [
+            x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+            x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin,
+        ],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+def init_dense(key, n_in: int, n_out: int, *, bias: bool = False, scale: float | None = None):
+    s = scale if scale is not None else (n_in**-0.5)
+    p = {"w": jax.random.normal(key, (n_in, n_out), jnp.float32) * s}
+    if bias:
+        p["b"] = jnp.zeros((n_out,), jnp.float32)
+    return p
+
+
+def swiglu_ffn(x, p):
+    """Gated MLP: (gate, up, down) — llama/mistral style."""
+    g = dense(x, p["w_gate"])
+    u = dense(x, p["w_up"])
+    return dense(jax.nn.silu(g) * u, p["w_down"])
+
+
+def gelu_ffn(x, p):
+    """Plain 2-matrix MLP (whisper style)."""
+    h = jax.nn.gelu(dense(x, p["w_in"], p.get("b_in")), approximate=True)
+    return dense(h, p["w_out"], p.get("b_out"))
+
+
+def init_swiglu(key, d: int, ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, ff), jnp.float32) * d**-0.5,
+        "w_up": jax.random.normal(k2, (d, ff), jnp.float32) * d**-0.5,
+        "w_down": jax.random.normal(k3, (ff, d), jnp.float32) * ff**-0.5,
+    }
+
+
+def init_gelu_ffn(key, d: int, ff: int, *, bias: bool = True):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "w_in": jax.random.normal(k1, (d, ff), jnp.float32) * d**-0.5,
+        "w_out": jax.random.normal(k2, (ff, d), jnp.float32) * ff**-0.5,
+    }
+    if bias:
+        p["b_in"] = jnp.zeros((ff,), jnp.float32)
+        p["b_out"] = jnp.zeros((d,), jnp.float32)
+    return p

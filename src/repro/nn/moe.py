@@ -1,0 +1,80 @@
+"""Mixture-of-Experts FFN with capacity-based expert-side dispatch.
+
+Per batch row: router softmax over E experts, token top-k selection, then
+each expert gathers its top-C tokens by router priority (C = S*k/E *
+capacity_factor), computes the gated-MLP, and results are scatter-added
+back with combine weights.  Over-capacity tokens are dropped (GShard
+semantics).  FLOPs scale with activated experts (k/E), not E — the honest
+MoE roofline.
+
+Expert weights are stacked (E, ...) so the expert dim can be sharded on
+the mesh "model" axis when divisible (granite: 32 experts / 16-way), and
+the hidden dim sharded otherwise (mixtral: 8 experts -> shard d_ff).
+Aux losses: load-balance (Switch) + router z-loss, returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(key, d: int, ff: int, num_experts: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e = num_experts
+    return {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * d**-0.5,
+        "w_gate": jax.random.normal(k2, (e, d, ff), jnp.float32) * d**-0.5,
+        "w_up": jax.random.normal(k3, (e, d, ff), jnp.float32) * d**-0.5,
+        "w_down": jax.random.normal(k4, (e, ff, d), jnp.float32) * ff**-0.5,
+    }
+
+
+def moe_ffn(
+    x: jnp.ndarray,
+    p,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (out (B, S, d), aux losses dict)."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # token-side top-k: keep only the k largest expert probs per token
+    top_vals, _ = jax.lax.top_k(probs, top_k)
+    kth = top_vals[..., -1:]
+    routed = jnp.where(probs >= kth, probs, 0.0)  # (B,S,E) sparse combine weights
+    routed = routed / jnp.maximum(routed.sum(-1, keepdims=True), 1e-9)
+
+    # expert-side capacity: each expert takes its top-C tokens per row
+    cap = max(1, int(s * top_k / e * capacity_factor))
+    cap = min(cap, s)
+    prio = jnp.swapaxes(routed, 1, 2)  # (B, E, S)
+    gate_vals, token_idx = jax.lax.top_k(prio, cap)  # (B, E, C)
+
+    # gather expert inputs: (B, E, C, d)
+    xin = jnp.take_along_axis(
+        x[:, None, :, :], token_idx[..., None].astype(jnp.int32), axis=2
+    )
+
+    # expert gated MLP (batched over E): einsum keeps the expert dim explicit
+    xg = jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(x.dtype))
+    xu = jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(xg) * xu
+    xo = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+
+    # combine: weight by gate value, scatter-add back to token positions
+    xo = xo * gate_vals[..., None].astype(x.dtype)
+    out = jnp.zeros_like(x)
+    bidx = jnp.arange(b)[:, None, None]
+    out = out.at[bidx, token_idx].add(xo, mode="drop")
+
+    # aux losses
+    me = probs.mean(axis=(0, 1))                      # mean router prob per expert
+    dispatch = (routed > 0).astype(jnp.float32)
+    ce = dispatch.mean(axis=(0, 1)) * e / top_k       # fraction routed per expert
+    load_balance = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return out, {"load_balance": load_balance, "router_z": z_loss}

@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda)   (per-channel decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: the sequential recurrence is a first-order linear scan
+h_t = a_t h_{t-1} + b_t, computed with ``jax.lax.associative_scan``
+(log-depth, vectorized over (B, W)) rather than a CUDA per-thread loop.
+Decode is the O(1) single-step update, so the hybrid arch runs long_500k.
+
+The full Griffin recurrent block wraps the RG-LRU with input/gate
+branches and a short depthwise causal conv, mirroring the paper's block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+C_EXP = 8.0
+
+
+def rglru_forward(x, p, *, h0=None):
+    """x: (B, S, W) -> (y (B,S,W), h_last (B,W)).  Associative scan over S."""
+    b, s, w = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"] + p["b_x"])
+    log_a = -C_EXP * r * jax.nn.softplus(p["lam"])[None, None, :]  # log a_t < 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    if h0 is not None:
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_decode_step(x_t, p, h_prev):
+    """x_t: (B, W); h_prev: (B, W) -> (y_t, h_new)."""
+    xf = x_t.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"] + p["b_x"])
+    log_a = -C_EXP * r * jax.nn.softplus(p["lam"])[None, :]
+    a = jnp.exp(log_a)
+    h_new = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return h_new.astype(x_t.dtype), h_new
+
+
+def init_rglru(key, width: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = width**-0.5
+    return {
+        "w_a": jax.random.normal(k1, (width, width), jnp.float32) * s,
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_x": jax.random.normal(k2, (width, width), jnp.float32) * s,
+        "b_x": jnp.zeros((width,), jnp.float32),
+        # init decay a in ~(0.9, 0.999): lam via softplus^-1
+        "lam": jax.random.uniform(k3, (width,), minval=0.3, maxval=0.8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Griffin recurrent block: conv + RG-LRU + gated merge
+# ---------------------------------------------------------------------------
+
+CONV_K = 4
+
+
+def init_recurrent_block(key, d: int, width: int):
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in_x": jax.random.normal(ks[0], (d, width), jnp.float32) * d**-0.5,
+        "w_in_gate": jax.random.normal(ks[1], (d, width), jnp.float32) * d**-0.5,
+        "conv_w": jax.random.normal(ks[2], (CONV_K, width), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((width,), jnp.float32),
+        "rglru": init_rglru(ks[3], width),
+        "w_out": jax.random.normal(ks[4], (width, d), jnp.float32) * width**-0.5,
+    }
+
+
+def recurrent_block(x, p):
+    """Griffin recurrent block forward.  x: (B,S,d) -> (B,S,d)."""
+    from repro.nn.ssm import _causal_conv
+
+    xb = x @ p["w_in_x"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["w_in_gate"].astype(x.dtype), approximate=True)
+    xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    y, _ = rglru_forward(xb, p["rglru"])
+    return (y * gate) @ p["w_out"].astype(x.dtype)
+
+
+def recurrent_block_decode(x_t, p, state):
+    """One-step decode.  state = {"conv": (B,K-1,W), "h": (B,W)}."""
+    xb = x_t @ p["w_in_x"].astype(x_t.dtype)
+    gate = jax.nn.gelu(x_t @ p["w_in_gate"].astype(x_t.dtype), approximate=True)
+    conv_in = jnp.concatenate([state["conv"], xb[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x_t.dtype)
+    xb = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, w) + p["conv_b"].astype(x_t.dtype))
+    y, h_new = rglru_decode_step(xb, p["rglru"], state["h"])
+    out = (y * gate) @ p["w_out"].astype(x_t.dtype)
+    return out, {"conv": conv_in[:, 1:, :], "h": h_new}
+
+
+def init_recurrent_state(batch: int, width: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, width), dtype),
+        "h": jnp.zeros((batch, width), jnp.float32),
+    }

@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked matmul form.
+
+The chunked algorithm (Dao & Gu, 2024) turns the linear recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ,   y_t = C_t h_t + D x_t
+
+into MXU-friendly blocks: within-chunk attention-like matmuls (masked by
+cumulative decays) + an inter-chunk state recurrence (lax.scan over
+chunks).  This is the TPU-native adaptation: the original CUDA kernel's
+warp-level scan becomes chunk matmuls sized to the MXU, with the O(S)
+scan only over S/chunk steps.
+
+Shapes: x (B,S,H,P) heads x headdim, dt (B,S,H), A (H,) (negative),
+Bm/Cm (B,S,G,N) with G groups broadcast over heads, D (H,).
+Decode keeps h (B,H,P,N) and costs O(1) per token — this is why the SSM
+arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Causal segment sums: out[..., i, j] = sum_{k=j+1..i} a[..., k],
+    -inf above the diagonal.  a: (..., Q) -> (..., Q, Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(x, dt, a_log, bm, cm, d_skip, *, chunk: int = 64):
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+    rep = h // g
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))           # (B,S,H) > 0
+    a = dt * a_log.astype(jnp.float32)[None, None, :]      # log decay, < 0
+    xdt = x.astype(jnp.float32) * dt[..., None]            # pre-scale x by dt
+
+    # chunked views
+    xc = xdt.reshape(b, nc, q, h, p)
+    ac = a.reshape(b, nc, q, h).transpose(0, 3, 1, 2)      # (B,H,NC,Q)
+    bc = bm.reshape(b, nc, q, g, n).astype(jnp.float32)
+    cc = cm.reshape(b, nc, q, g, n).astype(jnp.float32)
+    bch = jnp.repeat(bc, rep, axis=3)                      # broadcast groups->heads
+    cch = jnp.repeat(cc, rep, axis=3)
+
+    # 1. within-chunk (attention-like) term
+    L = jnp.exp(_segsum(ac))                               # (B,H,NC,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp", cch, bch, L, xc)
+
+    # 2. per-chunk input states
+    a_cum = jnp.cumsum(ac, axis=-1)                        # (B,H,NC,Q)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)        # (B,H,NC,Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", bch, decay_states, xc)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])                  # (B,H,NC)
+
+    def step(hprev, inp):
+        dec, st = inp  # dec (B,H), st (B,H,P,N)
+        hnew = dec[..., None, None] * hprev + st
+        return hnew, hprev  # emit the state BEFORE this chunk
+
+    from repro.nn.unroll import unroll_enabled
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hlast, prev_states = jax.lax.scan(
+        step,
+        h0,
+        (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4)),
+        unroll=nc if unroll_enabled() else 1,
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,NC,H,P,N)
+
+    # 4. state -> output term
+    state_decay = jnp.exp(a_cum)                           # (B,H,NC,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", cch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), hlast
+
+
+def ssd_decode_step(x_t, dt_t, a_log, b_t, c_t, d_skip, h_state):
+    """One decode step.  x_t (B,H,P), dt_t (B,H), b_t/c_t (B,G,N),
+    h_state (B,H,P,N) -> (y_t (B,H,P), new_state)."""
+    bsz, h, p = x_t.shape
+    g = b_t.shape[1]
+    rep = h // g
+    dt = jax.nn.softplus(dt_t.astype(jnp.float32))
+    decay = jnp.exp(dt * a_log.astype(jnp.float32)[None, :])   # (B,H)
+    bh = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)      # (B,H,N)
+    ch = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    xdt = x_t.astype(jnp.float32) * dt[..., None]
+    h_new = decay[..., None, None] * h_state + jnp.einsum("bhp,bhn->bhpn", xdt, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, ch)
+    y = y + x_t.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, :, None]
+    return y.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block (projections + short causal conv + SSD + gate)
+# ---------------------------------------------------------------------------
+
+CONV_K = 4
+
+
+def init_mamba2_block(key, d: int, *, expand: int, nheads: int, dstate: int, ngroups: int = 1):
+    d_inner = expand * d
+    p_dim = d_inner // nheads
+    keys = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * ngroups * dstate
+    return {
+        "in_proj": jax.random.normal(
+            keys[0], (d, 2 * d_inner + 2 * ngroups * dstate + nheads), jnp.float32
+        ) * d**-0.5,
+        "conv_w": jax.random.normal(keys[1], (CONV_K, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": -jnp.exp(jax.random.uniform(keys[2], (nheads,), minval=-1.0, maxval=1.0)),
+        "dt_bias": jax.random.normal(keys[3], (nheads,)) * 0.1,
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(keys[4], (d_inner, d), jnp.float32) * d_inner**-0.5,
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, kernel CONV_K.  u: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1], :] * w[i][None, None, :].astype(u.dtype)
+        for i in range(k)
+    )
+    return jax.nn.silu(out + b.astype(u.dtype))
+
+
+def mamba2_block(x, p, *, expand: int, nheads: int, dstate: int, ngroups: int = 1, chunk: int = 64):
+    """Full block forward (train/prefill).  x: (B,S,d) -> (B,S,d)."""
+    from repro.nn.layers import rms_norm
+
+    b, s, d = x.shape
+    d_inner = expand * d
+    p_dim = d_inner // nheads
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * ngroups * dstate], axis=-1
+    )
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + ngroups * dstate], axis=-1)
+    xs = xs.reshape(b, s, nheads, p_dim)
+    bm = bm.reshape(b, s, ngroups, dstate)
+    cm = cm.reshape(b, s, ngroups, dstate)
+    dt = dt + p["dt_bias"].astype(dt.dtype)[None, None, :]
+    y, _ = ssd_forward(xs, dt, p["a_log"], bm, cm, p["d_skip"], chunk=chunk)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_decode(x_t, p, state, *, expand: int, nheads: int, dstate: int, ngroups: int = 1):
+    """One-token decode.  x_t: (B,d); state = {"conv": (B,K-1,C), "ssm": (B,H,P,N)}."""
+    from repro.nn.layers import rms_norm
+
+    b, d = x_t.shape
+    d_inner = expand * d
+    p_dim = d_inner // nheads
+    zxbcdt = x_t @ p["in_proj"].astype(x_t.dtype)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * ngroups * dstate], axis=-1
+    )
+    # rolling conv state
+    conv_in = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(x_t.dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_in, w) + p["conv_b"].astype(x_t.dtype)
+    )
+    new_conv = conv_in[:, 1:, :]
+    xs, bm, cm = jnp.split(conv_out, [d_inner, d_inner + ngroups * dstate], axis=-1)
+    xs = xs.reshape(b, nheads, p_dim)
+    bm = bm.reshape(b, ngroups, dstate)
+    cm = cm.reshape(b, ngroups, dstate)
+    dt = dt + p["dt_bias"].astype(dt.dtype)[None, :]
+    y, new_ssm = ssd_decode_step(xs, dt, p["a_log"], bm, cm, p["d_skip"], state["ssm"])
+    y = y.reshape(b, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"].astype(x_t.dtype)
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_mamba2_state(batch: int, d: int, *, expand: int, nheads: int, dstate: int, ngroups: int = 1, dtype=jnp.float32):
+    d_inner = expand * d
+    conv_dim = d_inner + 2 * ngroups * dstate
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nheads, d_inner // nheads, dstate), jnp.float32),
+    }

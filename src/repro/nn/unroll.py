@@ -1,0 +1,28 @@
+"""Unroll context for cost extraction.
+
+XLA's HloCostAnalysis visits while-loop bodies ONCE, so FLOPs/bytes of
+scanned inner loops (flash-attention KV blocks, SSD chunk recurrence)
+are undercounted in compiled cost analysis.  The roofline harness lowers
+single layers inside ``unroll_scans()`` so every inner iteration is
+present in the HLO and the per-layer numbers are exact; production
+lowering keeps rolled loops (compact HLO).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+
+_UNROLL: ContextVar = ContextVar("unroll_scans", default=False)
+
+
+@contextmanager
+def unroll_scans():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def unroll_enabled() -> bool:
+    return bool(_UNROLL.get())

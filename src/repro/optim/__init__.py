@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, sgd, adam, adamw, get_optimizer
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine

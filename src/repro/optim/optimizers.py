@@ -1,0 +1,93 @@
+"""Optimizers from scratch (no optax): functional (init, update) pairs.
+
+``update(grads, state, params) -> (new_params, new_state)``.  All states
+are pytrees so they stack/vmap/shard exactly like parameters — required
+for the federated simulation where every node carries its own state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray], momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        cur_lr = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            new_params = jax.tree.map(lambda p, m: p - cur_lr * m, params, mu)
+            return new_params, {"step": step, "mu": mu}
+        new_params = jax.tree.map(lambda p, g: p - cur_lr * g, params, grads)
+        return new_params, {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adam(
+    lr: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        cur_lr = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p
+            return p - cur_lr * step_
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable = 1e-3, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adam":
+        return adam(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise KeyError(f"unknown optimizer {name!r}")

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (callables of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * ((1 - alpha) * cos + alpha)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int, alpha: float = 0.0):
+    cos = cosine_decay(lr, max(decay_steps - warmup_steps, 1), alpha)
+
+    def fn(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr * step_f / max(warmup_steps, 1)
+        return jnp.where(step_f < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

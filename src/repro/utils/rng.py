@@ -1,0 +1,19 @@
+"""Small RNG helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def key_iter(seed: int):
+    """Infinite iterator of fresh PRNG keys."""
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def split_like(key, tree):
+    """Split a key into one key per leaf of ``tree`` (same structure)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))

@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def fed_ohio():
+    """Small (fast) synthetic OhioT1DM twin shared across tests."""
+    from repro.data import load_federated_dataset
+
+    return load_federated_dataset("ohiot1dm", fast=True)
+
+
+def assert_finite(x, name="value"):
+    assert np.isfinite(np.asarray(x)).all(), f"{name} contains NaN/Inf"

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned
+architecture family runs one forward/train step and one decode step on
+CPU with shape + finiteness asserts (harness requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arch import build_arch
+from repro.arch.common import init_train_state, make_train_step
+from repro.config import get_arch_config, list_archs
+from repro.nn.layers import pad_vocab
+
+ARCHS = [a for a in list_archs() if a != "glucose-lstm"]
+
+
+def _batch_for(arch, B, S):
+    specs = arch.input_specs("train_4k", override_batch=B, override_seq=S)
+    return jax.tree.map(
+        lambda sp: jnp.ones(sp.shape, sp.dtype)
+        if sp.dtype == jnp.int32
+        else jnp.full(sp.shape, 0.1, sp.dtype),
+        specs,
+    )
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_reduced_train_step(name):
+    cfg = get_arch_config(name).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    arch = build_arch(cfg)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(arch, B=2, S=32)
+    step = make_train_step(arch.loss_fn, num_microbatches=2, lr=1e-3)
+    state = init_train_state(params)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"])), name
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(new_state.params))
+    )
+    assert moved, name
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_reduced_decode_step(name):
+    cfg = get_arch_config(name).reduced()
+    arch = build_arch(cfg)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    B, cache_len = 2, 64
+    state = arch.init_decode_state(params, B, cache_len)
+    dec = jax.jit(arch.decode_fn)
+    st = state
+    for pos in range(3):
+        batch = {"token": jnp.full((B, 1), 3, jnp.int32), "pos": jnp.asarray(pos, jnp.int32)}
+        logits, st = dec(params, st, batch)
+    vp = pad_vocab(cfg.vocab_size)
+    assert logits.shape == (B, 1, vp), (name, logits.shape)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), name
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_reduced_prefill(name):
+    cfg = get_arch_config(name).reduced()
+    arch = build_arch(cfg)
+    params = arch.init_params(jax.random.PRNGKey(0))
+    specs = arch.input_specs("prefill_32k", override_batch=2, override_seq=32)
+    batch = jax.tree.map(
+        lambda sp: jnp.ones(sp.shape, sp.dtype)
+        if sp.dtype == jnp.int32
+        else jnp.full(sp.shape, 0.1, sp.dtype),
+        specs,
+    )
+    logits, cache = jax.jit(arch.prefill_fn)(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), name
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    expect = {
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    }
+    for name, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_arch_config(name)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v), name
+    m = get_arch_config("mamba2-370m")
+    assert (m.num_layers, m.d_model, m.vocab_size, m.ssm_state) == (48, 1024, 50280, 128)
+    x = get_arch_config("mixtral-8x22b")
+    assert (x.num_experts, x.experts_per_token) == (8, 2)
+    g = get_arch_config("granite-moe-1b-a400m")
+    assert (g.num_experts, g.experts_per_token) == (32, 8)
+
+
+def test_vlm_concat_lengths():
+    cfg = get_arch_config("llava-next-mistral-7b").reduced()
+    arch = build_arch(cfg)
+    specs = arch.input_specs("train_4k", override_batch=2, override_seq=32)
+    tv = cfg.vision_tokens
+    assert specs["patches"].shape[1] == tv
+    assert specs["tokens"].shape[1] == 32 - tv
+    assert specs["labels"].shape[1] == 32
+
+
+def test_long_500k_support_flags():
+    support = {a: build_arch(get_arch_config(a)).supports("long_500k") for a in ARCHS}
+    assert support["mamba2-370m"] and support["recurrentgemma-9b"]
+    assert support["mistral-large-123b"] and support["mixtral-8x22b"]
+    assert support["llava-next-mistral-7b"]
+    assert not support["yi-34b"] and not support["yi-6b"]
+    assert not support["qwen2.5-3b"] and not support["whisper-medium"]
+    assert not support["granite-moe-1b-a400m"]

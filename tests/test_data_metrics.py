@@ -1,0 +1,112 @@
+"""Data pipeline + clinical metric tests."""
+import numpy as np
+import pytest
+
+from repro.data import DATASET_SPECS, generate_patient_series, load_federated_dataset
+from repro.data.windowing import make_windows, normalize, split_by_time, zscore_stats
+from repro.metrics import all_metrics, grmse, rmse, time_lag_minutes
+
+
+def test_dataset_specs_match_paper_table1():
+    assert DATASET_SPECS["ohiot1dm"].num_patients == 12
+    assert DATASET_SPECS["abc4d"].num_patients == 25
+    assert DATASET_SPECS["ctr3"].num_patients == 30
+    assert DATASET_SPECS["replace-bg"].num_patients == 226
+    assert DATASET_SPECS["replace-bg"].num_days == 251
+
+
+@pytest.mark.parametrize("name", list(DATASET_SPECS))
+def test_synth_statistics_calibrated(name):
+    """Generated population must land near Table 1's mean/SD (±15%)."""
+    spec = DATASET_SPECS[name]
+    n = min(spec.num_patients, 12)
+    series = [generate_patient_series(spec, p, days=10) for p in range(n)]
+    means = [np.nanmean(s) for s in series]
+    sds = [np.nanstd(s) for s in series]
+    assert abs(np.mean(means) - spec.mean_bg) < 0.15 * spec.mean_bg, (np.mean(means), spec.mean_bg)
+    assert abs(np.mean(sds) - spec.sd_bg) < 0.25 * spec.sd_bg, (np.mean(sds), spec.sd_bg)
+
+
+def test_synth_range_and_missingness():
+    spec = DATASET_SPECS["abc4d"]
+    s = generate_patient_series(spec, 0, days=10)
+    valid = s[~np.isnan(s)]
+    assert valid.min() >= 40.0 and valid.max() <= 400.0
+    assert 0 < np.isnan(s).mean() < 0.25
+
+
+def test_synth_deterministic():
+    spec = DATASET_SPECS["ctr3"]
+    a = generate_patient_series(spec, 3, days=3)
+    b = generate_patient_series(spec, 3, days=3)
+    np.testing.assert_array_equal(a, b)
+    c = generate_patient_series(spec, 4, days=3)
+    assert not np.array_equal(np.nan_to_num(a), np.nan_to_num(c))
+
+
+def test_split_fractions():
+    s = np.arange(1000, dtype=np.float32)
+    tr, va, te = split_by_time(s)
+    assert len(tr) == 600 and len(va) == 200 and len(te) == 200
+    np.testing.assert_array_equal(np.concatenate([tr, va, te]), s)
+
+
+def test_windows_drop_missing_targets():
+    s = np.arange(100, dtype=np.float32)
+    raw = s.copy()
+    raw[50] = np.nan
+    norm = np.nan_to_num(raw)
+    x, y, y_raw = make_windows(norm, raw, history_len=12, horizon=6)
+    # the window whose target is index 50 must be dropped
+    assert len(x) == 100 - 12 - 6 + 1 - 1
+    assert not np.isnan(y_raw).any()
+
+
+def test_window_alignment():
+    """Target is exactly H steps after the last history sample."""
+    s = np.arange(60, dtype=np.float32)
+    x, y, y_raw = make_windows(s, s, history_len=12, horizon=6)
+    np.testing.assert_array_equal(x[0], np.arange(12))
+    assert y[0] == 12 + 6 - 1  # index L+H-1
+    assert y_raw[0] == y[0]
+
+
+def test_federated_load_shapes(fed_ohio):
+    assert fed_ohio.num_nodes == 12
+    assert fed_ohio.x.ndim == 3 and fed_ohio.x.shape[2] == 12
+    assert (fed_ohio.counts > 0).all()
+    # padding zeros beyond counts
+    i = int(np.argmin(fed_ohio.counts))
+    assert np.allclose(fed_ohio.x[i, fed_ohio.counts[i]:], 0.0)
+
+
+def test_normalization_zero_imputation(fed_ohio):
+    # normalized train data has |mean| small and missing -> exactly 0
+    assert abs(np.mean([p.train_x.mean() for p in fed_ohio.patients])) < 0.5
+
+
+def test_grmse_penalizes_clinically_dangerous_errors():
+    """Overestimating in hypoglycemia must cost more than the same
+    error in euglycemia (Del Favero penalty)."""
+    y_hypo = np.full(10, 55.0)
+    y_eu = np.full(10, 120.0)
+    over = 30.0
+    assert grmse(y_hypo, y_hypo + over) > grmse(y_eu, y_eu + over)
+    # underestimation in hyperglycemia likewise
+    y_hyper = np.full(10, 260.0)
+    assert grmse(y_hyper, y_hyper - over) > grmse(y_eu, y_eu - over)
+
+
+def test_time_lag_detects_shift():
+    t = np.arange(500)
+    y = np.sin(t / 20.0) * 50 + 150
+    yhat = np.roll(y, 4)  # prediction lags truth by 4 samples = 20 min
+    assert time_lag_minutes(y, yhat) == pytest.approx(20.0)
+    assert time_lag_minutes(y, y) == 0.0
+
+
+def test_all_metrics_keys():
+    y = np.random.default_rng(0).uniform(60, 300, 100)
+    m = all_metrics(y, y + 5)
+    assert set(m) == {"rmse", "mard", "mae", "grmse", "time_lag"}
+    assert m["rmse"] == pytest.approx(5.0)

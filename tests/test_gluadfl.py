@@ -1,0 +1,140 @@
+"""GluADFL algorithm tests (Algorithm 1) + FedAvg + gossip equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import GluADFL, FedAvg, gossip_mix_tree, mixing_matrix, ring_adjacency
+from repro.core.gossip import gossip_mix_kernel
+from repro.models import LSTMModel, NBeatsModel
+from repro.optim import adam, sgd
+from repro.utils.pytree import tree_l2_norm, tree_mean, tree_sub, tree_weighted_mix
+
+
+def _toy_fed(n=6, m=40, L=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, m, L)).astype(np.float32)
+    w_true = rng.normal(size=(L,)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(size=(n, m)).astype(np.float32)
+    counts = np.full((n,), m, np.int32)
+    return x, y, counts
+
+
+def test_gossip_mix_matches_manual():
+    n = 5
+    stacked = {"w": jnp.arange(n * 3, dtype=jnp.float32).reshape(n, 3)}
+    mix = mixing_matrix(ring_adjacency(n), jnp.ones((n,)), 7)
+    out = gossip_mix_tree(stacked, mix)
+    manual = np.asarray(mix) @ np.asarray(stacked["w"])
+    np.testing.assert_allclose(np.asarray(out["w"]), manual, atol=1e-6)
+
+
+def test_gossip_kernel_equals_tree():
+    n, d = 7, 130
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(0), (n, d)),
+               "b": jax.random.normal(jax.random.PRNGKey(1), (n, 5, 2))}
+    mix = mixing_matrix(ring_adjacency(n), jnp.ones((n,)), 7)
+    a = gossip_mix_tree(stacked, mix)
+    b = gossip_mix_kernel(stacked, mix)
+    for k in stacked:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]), atol=1e-5)
+
+
+def test_gluadfl_loss_decreases():
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=16).as_model()
+    cfg = FLConfig(topology="random", num_nodes=6, rounds=40, comm_batch=3)
+    tr = GluADFL(m, adam(5e-3), cfg)
+    pop, hist, _ = tr.train(jax.random.PRNGKey(0), x, y, counts, batch_size=16)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first * 0.8, (first, last)
+
+
+def test_gluadfl_population_is_node_mean():
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=3)
+    tr = GluADFL(m, sgd(1e-2), cfg)
+    pop, _, state = tr.train(jax.random.PRNGKey(0), x, y, counts, batch_size=8)
+    manual = tree_mean(state.params)
+    assert float(tree_l2_norm(tree_sub(pop, manual))) < 1e-6
+
+
+@pytest.mark.parametrize("topology", ["ring", "cluster", "random", "full"])
+def test_gluadfl_all_topologies_run(topology):
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology=topology, num_nodes=6, rounds=4, comm_batch=3)
+    tr = GluADFL(m, sgd(1e-2), cfg)
+    pop, hist, _ = tr.train(jax.random.PRNGKey(0), x, y, counts, batch_size=8)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_gluadfl_inactive_nodes_frozen():
+    """With inactive_ratio=1 forced via mask, params must not change.
+    We emulate by 0 learning rate + full inactivity robustness check."""
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="random", num_nodes=6, rounds=6, inactive_ratio=0.95)
+    tr = GluADFL(m, sgd(1e-2), cfg)
+    pop, hist, state = tr.train(jax.random.PRNGKey(0), x, y, counts, batch_size=8)
+    # staleness grows for nodes that sat out
+    assert float(state.staleness.max()) > 0
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_gluadfl_premix_vs_mixed_gradients_differ():
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=5)
+    p1, _, _ = GluADFL(m, sgd(1e-2), cfg, grad_at="premix").train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8
+    )
+    p2, _, _ = GluADFL(m, sgd(1e-2), cfg, grad_at="mixed").train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8
+    )
+    assert float(tree_l2_norm(tree_sub(p1, p2))) > 0
+
+
+def test_fedavg_loss_decreases():
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=16).as_model()
+    cfg = FLConfig(num_nodes=6, rounds=30, local_steps=2)
+    fa = FedAvg(m, adam(5e-3), cfg)
+    params, hist = fa.train(jax.random.PRNGKey(0), x, y, counts, batch_size=16)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.8
+
+
+def test_single_node_gluadfl_matches_local_sgd_shape():
+    """Degenerate federation (N=1) must still train and return params of
+    the right structure."""
+    x, y, counts = _toy_fed(n=1)
+    m = NBeatsModel(hidden=16).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=1, rounds=3)
+    tr = GluADFL(m, sgd(1e-2), cfg)
+    pop, hist, _ = tr.train(jax.random.PRNGKey(0), x, y, counts, batch_size=8)
+    ref = m.init(jax.random.PRNGKey(0))
+    assert jax.tree.structure(pop) == jax.tree.structure(ref)
+
+
+def test_dp_noise_broadcast_only():
+    """Local-DP gossip (beyond-paper): neighbours see noised params, each
+    node's own contribution stays clean; sigma=0 reduces to vanilla."""
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=5)
+    p_clean, _, _ = GluADFL(m, sgd(1e-2), cfg, dp_noise_sigma=0.0).train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8
+    )
+    p_zero, _, _ = GluADFL(m, sgd(1e-2), cfg).train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8
+    )
+    assert float(tree_l2_norm(tree_sub(p_clean, p_zero))) < 1e-6
+    p_dp, hist, _ = GluADFL(m, sgd(1e-2), cfg, dp_noise_sigma=0.05).train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8
+    )
+    # noised run differs but still trains (finite loss)
+    assert float(tree_l2_norm(tree_sub(p_clean, p_dp))) > 0
+    assert np.isfinite(hist[-1]["loss"])

@@ -1,0 +1,107 @@
+"""Launcher-layer unit tests: HLO collective parsing, divisibility-aware
+sharding helpers, checkpoint round-trip, config overrides."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ExperimentConfig, apply_overrides, get_arch_config
+from repro.launch.dryrun import _shape_bytes, collective_schedule
+
+
+SAMPLE_HLO = """
+  %all-gather.1 = bf16[16,1024]{1,0} all-gather(%param.1), replica_groups={}
+  %all-reduce.2 = f32[8,256]{1,0} all-reduce(%x), to_apply=%add
+  %all-reduce-start.3 = f32[128]{0} all-reduce-start(%y), to_apply=%add
+  %all-reduce-done.3 = f32[128]{0} all-reduce-done(%all-reduce-start.3)
+  %reduce-scatter.4 = bf16[4,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %collective-permute.5 = s32[32]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tuple.9 = (f32[2,2]{1,0}, f32[4]{0}) all-to-all(%a, %b), dimensions={0}
+"""
+
+
+def test_collective_schedule_counts_and_bytes():
+    out = collective_schedule(SAMPLE_HLO)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 16 * 1024 * 2
+    # -start counted once, -done skipped
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-reduce"]["bytes"] == 8 * 256 * 4 + 128 * 4
+    # wire model: all-reduce moves 2x
+    assert out["all-reduce"]["wire_bytes"] == 2 * (8 * 256 * 4 + 128 * 4)
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["collective-permute"]["bytes"] == 32 * 4
+    # tuple-result all-to-all sums both components
+    assert out["all-to-all"]["bytes"] == 2 * 2 * 4 + 4 * 4
+    assert out["total_wire_bytes"] > 0
+
+
+def test_shape_bytes_parses_dtypes():
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("pred[7]") == 7
+    assert _shape_bytes("(f32[2], bf16[4,4])") == 8 + 32
+
+
+def test_apply_overrides_nested():
+    cfg = ExperimentConfig()
+    cfg = apply_overrides(cfg, ["fl.comm_batch=3", "train.lr=0.01", "data.dataset=ctr3"])
+    assert cfg.fl.comm_batch == 3
+    assert cfg.train.lr == pytest.approx(0.01)
+    assert cfg.data.dataset == "ctr3"
+    with pytest.raises(KeyError):
+        apply_overrides(cfg, ["fl.nonexistent=1"])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.launch.train import load_checkpoint, save_checkpoint
+    from repro.models import LSTMModel
+
+    m = LSTMModel(hidden=16)
+    params = m.init(jax.random.PRNGKey(0))
+    path = tmp_path / "ckpt.npz"
+    save_checkpoint(path, params)
+    back = load_checkpoint(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+
+
+def test_param_pspecs_divisibility_fallback():
+    """kv-projection output (8 heads x 128) shards 16 ways via the fused
+    dim; a 7-wide dim must fall back to replication."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.arch.sharding import param_pspecs
+
+    params = {
+        "wk": jnp.zeros((128, 8 * 128)),     # fused kv dim 1024 % 16 == 0
+        "odd": jnp.zeros((7, 13)),            # nothing divisible
+        "layers": {"wq": jnp.zeros((4, 128, 256))},  # stacked
+    }
+    specs = param_pspecs(params, axis_size=16)
+    assert specs["wk"] == P(None, "model")
+    assert specs["odd"] == P(None, None)
+    assert specs["layers"]["wq"] == P(None, None, "model")
+
+
+def test_reduced_configs_under_cpu_limits():
+    for name in ("mistral-large-123b", "mixtral-8x22b", "whisper-medium"):
+        r = get_arch_config(name).reduced()
+        assert r.num_layers == 2
+        assert r.d_model <= 512
+        assert (r.num_experts or 0) <= 4
+
+
+def test_gossip_dp_ring_specs_roundtrip():
+    """ring_mix_params with shard-aware specs matches the unsharded
+    reference on a single device (specs degenerate to replicated)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.gossip_dp import ring_mix_params
+
+    mesh = jax.make_mesh((1,), ("node",))
+    params = {"w": jnp.arange(12.0).reshape(3, 4)}
+    specs = {"w": P(None, None)}
+    out = ring_mix_params(params, mesh, ("node",), specs=specs)
+    # single node: mix = (w + w + w)/3 = w
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(params["w"]), atol=1e-6)

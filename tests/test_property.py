@@ -1,0 +1,137 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    cluster_adjacency,
+    full_adjacency,
+    mixing_matrix,
+    random_adjacency,
+    ring_adjacency,
+)
+from repro.kernels.ops import gossip_mix
+from repro.kernels.ref import gossip_mix_ref
+from repro.metrics import grmse, mae, mard, rmse
+from repro.utils.pytree import tree_to_vector, tree_weighted_mix, vector_to_tree
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    n=st.integers(2, 32),
+    topo=st.sampled_from(["ring", "cluster", "full", "random"]),
+    comm_batch=st.integers(1, 8),
+    inactive=st.floats(0.0, 0.9),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_mixing_matrix_always_row_stochastic(n, topo, comm_batch, inactive, seed):
+    """Invariant: every round's mixing matrix is row-stochastic with
+    non-negative entries, whatever the topology/activity — gossip never
+    creates or destroys parameter mass."""
+    key = jax.random.PRNGKey(seed)
+    if topo == "ring":
+        adj = ring_adjacency(n)
+    elif topo == "cluster":
+        adj = cluster_adjacency(n, 4)
+    elif topo == "full":
+        adj = full_adjacency(n)
+    else:
+        adj = random_adjacency(key, n, min(comm_batch, n - 1))
+    active = (jax.random.uniform(key, (n,)) >= inactive).astype(jnp.float32)
+    m = np.asarray(mixing_matrix(adj, active, comm_batch))
+    assert (m >= -1e-7).all()
+    np.testing.assert_allclose(m.sum(axis=1), 1.0, atol=1e-5)
+
+
+@given(
+    n=st.integers(2, 16),
+    d=st.integers(1, 300),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_gossip_preserves_mean(n, d, seed):
+    """Invariant: with a DOUBLY-stochastic mix (symmetric topologies,
+    all active), the federation mean parameter vector is conserved —
+    the fixed point of Algorithm 1 is consensus on the average."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (n, d))
+    # symmetric doubly-stochastic mix: Metropolis weights on a ring
+    adj = np.asarray(ring_adjacency(n))
+    m = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if adj[i, j]:
+                m[i, j] = 1.0 / 3.0
+        m[i, i] = 1.0 - m[i].sum()
+    out = gossip_mix_ref(jnp.asarray(m, jnp.float32), w)
+    np.testing.assert_allclose(
+        np.asarray(out).mean(axis=0), np.asarray(w).mean(axis=0), atol=1e-4
+    )
+
+
+@given(n=st.integers(2, 12), d=st.integers(1, 200), seed=st.integers(0, 500))
+@settings(**SETTINGS)
+def test_gossip_kernel_equals_oracle(n, d, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    mix = jax.nn.softmax(jax.random.normal(keys[0], (n, n)), axis=-1)
+    w = jax.random.normal(keys[1], (n, d))
+    active = (jax.random.uniform(keys[2], (n,)) > 0.5).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(gossip_mix(mix, w, active)),
+        np.asarray(gossip_mix_ref(mix, w, active)),
+        atol=1e-5,
+    )
+
+
+@given(
+    shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1, max_size=5),
+    seed=st.integers(0, 100),
+)
+@settings(**SETTINGS)
+def test_tree_vector_roundtrip(shapes, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+            for i, s in enumerate(shapes)}
+    vec = tree_to_vector(tree)
+    back = vector_to_tree(vec, tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(tree[k]), np.asarray(back[k]), atol=1e-6)
+
+
+@given(
+    m=st.integers(2, 200),
+    scale=st.floats(1.0, 100.0),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_metric_invariants(m, scale, seed):
+    """RMSE >= MAE; gRMSE >= RMSE (penalty >= 1); all zero at y == yhat."""
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(40, 400, m)
+    yhat = y + rng.normal(0, scale, m)
+    assert rmse(y, yhat) >= mae(y, yhat) - 1e-9
+    assert grmse(y, yhat) >= rmse(y, yhat) - 1e-6
+    assert rmse(y, y) == 0 and mae(y, y) == 0 and mard(y, y) == 0
+
+
+@given(
+    perm_seed=st.integers(0, 100),
+    n=st.integers(4, 24),
+)
+@settings(**SETTINGS)
+def test_gossip_equivariance_under_node_relabeling(perm_seed, n):
+    """Permuting nodes and mixing = mixing and permuting (the gossip
+    primitive has no hidden node-order dependence)."""
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(n)
+    d = 17
+    w = rng.normal(size=(n, d)).astype(np.float32)
+    mix = np.asarray(jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(perm_seed), (n, n)), axis=-1))
+    out = np.asarray(gossip_mix_ref(jnp.asarray(mix), jnp.asarray(w)))
+    out_perm = np.asarray(
+        gossip_mix_ref(jnp.asarray(mix[np.ix_(perm, perm)]), jnp.asarray(w[perm]))
+    )
+    np.testing.assert_allclose(out[perm], out_perm, atol=1e-5)

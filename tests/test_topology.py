@@ -1,0 +1,105 @@
+"""Topology + mixing-matrix unit tests (Algorithm 1 lines 5-9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import (
+    cluster_adjacency,
+    full_adjacency,
+    mixing_matrix,
+    random_adjacency,
+    ring_adjacency,
+    round_adjacency,
+    spectral_gap,
+    star_adjacency,
+)
+
+
+@pytest.mark.parametrize("n", [4, 12, 25, 226])
+def test_ring_degree(n):
+    a = np.asarray(ring_adjacency(n))
+    assert (a.sum(1) == 2).all()
+    assert np.allclose(a, a.T)
+    assert np.diag(a).sum() == 0
+
+
+@pytest.mark.parametrize("n,cs", [(12, 4), (25, 5), (30, 4)])
+def test_cluster_connected(n, cs):
+    a = np.asarray(cluster_adjacency(n, cs))
+    assert np.allclose(a, a.T)
+    # connectivity: (I + A)^n has no zeros
+    reach = np.linalg.matrix_power(np.eye(n) + a, n) > 0
+    assert reach.all(), "cluster graph must be connected"
+
+
+def test_star_is_fedavg_topology():
+    a = np.asarray(star_adjacency(10))
+    assert a[0, 1:].sum() == 9 and a[1:, 0].sum() == 9
+    assert a[1:, 1:].sum() == 0
+
+
+@pytest.mark.parametrize("degree", [1, 3, 7])
+def test_random_adjacency_degree_bound(degree):
+    a = np.asarray(random_adjacency(jax.random.PRNGKey(0), 20, degree))
+    assert np.allclose(a, a.T)
+    assert np.diag(a).sum() == 0
+    assert (a.sum(1) >= degree).all()  # symmetrization only adds edges
+
+
+def test_random_adjacency_time_varying():
+    a1 = random_adjacency(jax.random.PRNGKey(1), 16, 3)
+    a2 = random_adjacency(jax.random.PRNGKey(2), 16, 3)
+    assert not np.allclose(np.asarray(a1), np.asarray(a2))
+
+
+def test_mixing_matrix_row_stochastic():
+    n = 12
+    adj = ring_adjacency(n)
+    active = jnp.ones((n,))
+    m = np.asarray(mixing_matrix(adj, active, 7))
+    np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-6)
+    assert (m >= 0).all()
+
+
+def test_mixing_matrix_inactive_rows_identity():
+    n = 8
+    adj = full_adjacency(n)
+    active = jnp.asarray([1, 0, 1, 0, 1, 1, 0, 1], jnp.float32)
+    m = np.asarray(mixing_matrix(adj, active, 7))
+    for i in range(n):
+        if active[i] == 0:
+            expect = np.zeros(n)
+            expect[i] = 1.0
+            np.testing.assert_allclose(m[i], expect, atol=1e-6)
+        else:
+            # active rows never average with inactive neighbours
+            assert (m[i][np.asarray(active) == 0] == 0).all()
+
+
+def test_mixing_matrix_comm_batch_cap():
+    n = 10
+    adj = full_adjacency(n)  # 9 neighbours each
+    m = np.asarray(mixing_matrix(adj, jnp.ones((n,)), 3))
+    # each row: self + at most B=3 neighbours
+    assert ((m > 0).sum(1) <= 4).all()
+
+
+def test_spectral_gap_ordering():
+    """More connectivity => larger spectral gap (faster gossip mixing) —
+    the paper's Fig 4 explanation (random > cluster > ring)."""
+    n = 24
+    ones = jnp.ones((n,))
+    g_ring = spectral_gap(mixing_matrix(ring_adjacency(n), ones, 7))
+    g_cluster = spectral_gap(mixing_matrix(cluster_adjacency(n, 4), ones, 7))
+    g_full = spectral_gap(mixing_matrix(full_adjacency(n), ones, 23))
+    assert g_ring < g_cluster < g_full
+
+
+def test_round_adjacency_dispatch():
+    k = jax.random.PRNGKey(0)
+    for topo in ("ring", "cluster", "random", "star", "full"):
+        a = round_adjacency(topo, 12, k, 7)
+        assert a.shape == (12, 12)
+    with pytest.raises(KeyError):
+        round_adjacency("hypercube", 12, k, 7)
