@@ -66,7 +66,8 @@ def _policy(dp, *, train: bool = False):
 
 
 def _cost(compiled) -> dict:
-    c = compiled.cost_analysis() or {}
+    from repro.utils.compat import cost_analysis
+    c = cost_analysis(compiled)
     colls = collective_schedule(compiled.as_text())
     return {
         "flops": float(c.get("flops", 0.0)),

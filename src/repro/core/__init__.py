@@ -12,7 +12,12 @@ from repro.core.topology import (
     spectral_gap,
 )
 from repro.core.async_sched import bernoulli_active, markov_active, staleness_update
-from repro.core.gossip import gossip_mix_tree, gossip_mix_kernel
+from repro.core.gossip import (
+    gossip_mix_tree,
+    gossip_mix_kernel,
+    gossip_mix_dp_kernel,
+    sharded_gossip_mix,
+)
 from repro.core.gluadfl import GluADFL, FLState
 from repro.core.fedavg import FedAvg
 from repro.core.meta import MAML, MetaSGD

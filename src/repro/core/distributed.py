@@ -25,18 +25,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.utils.compat import shard_map as _shard_map
+
 PyTree = Any
 
 
-def ring_gossip_shard(w, active, *, axis: str, self_w: float = 1.0 / 3.0):
+def ring_gossip_shard(w, active, *, axis: str, n_shards: int, self_w: float = 1.0 / 3.0):
     """shard_map body: ring mix via two collective-permutes.
 
     ``w``: local block of stacked params, leading dim = nodes-per-shard
     (1 when fully sharded).  ``active``: per-shard (1,) activity flag
     block.  Inactive nodes keep their row; active nodes average self with
-    *active* ring neighbours.
+    *active* ring neighbours.  ``n_shards`` is static (the ppermute
+    source/target lists need a Python int — the caller reads it off the
+    mesh).
     """
-    n_shards = jax.lax.axis_size(axis)
     fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
     bwd = [((i + 1) % n_shards, i) for i in range(n_shards)]
     w_prev = jax.lax.ppermute(w, axis, fwd)
@@ -57,6 +60,66 @@ def general_gossip_shard(w, mix_rows, *, axis: str):
     return jnp.einsum("km,md->kd", mix_rows, w_all.astype(jnp.float32)).astype(w.dtype)
 
 
+_FED_MESH_CACHE: dict = {}
+
+
+def _default_federation_mesh(num_nodes: int) -> Mesh:
+    """Mesh for ``sharded_gossip_mix`` when the caller passes none —
+    built once per (N, device-count) pair (mesh construction at trace
+    time is cheap but not free inside a scanned round body)."""
+    key = (num_nodes, jax.device_count())
+    if key not in _FED_MESH_CACHE:
+        from repro.launch.mesh import make_federation_mesh
+
+        _FED_MESH_CACHE[key] = make_federation_mesh(num_nodes)
+    return _FED_MESH_CACHE[key]
+
+
+def sharded_gossip_mix(
+    stacked_params: PyTree,
+    mix: jnp.ndarray,
+    active: jnp.ndarray | None = None,
+    *,
+    mesh: Mesh | None = None,
+    node_axes: tuple[str, ...] | None = None,
+) -> PyTree:
+    """Device-parallel gossip mix — drop-in peer of ``gossip_mix_tree`` /
+    ``gossip_mix_kernel`` (same ``(stacked, mix[, active])`` signature).
+
+    The federation axis N is sharded over the mesh's node axes: each
+    device holds N/devices rows of every leaf plus the matching rows of
+    the (N, N) mixing matrix, all-gathers the node axis once per leaf,
+    and contracts locally (``general_gossip_shard``).  With no ``mesh``
+    a cached 1-axis ``("node",)`` mesh over the largest device count
+    dividing N is used (``launch.mesh.make_federation_mesh``).
+
+    Jit/scan friendly: mesh resolution happens at trace time, so the
+    whole FL round — including this collective — compiles into one
+    program (the trainer's ``mixer="sharded"`` path).
+    """
+    if mesh is None:
+        mesh = _default_federation_mesh(mix.shape[0])
+    axes = node_axes or tuple(a for a in mesh.axis_names if a != "model")
+    axis = axes if len(axes) > 1 else axes[0]
+
+    def leaf(l):
+        flat = l.reshape(l.shape[0], -1)
+        out = _shard_map(
+            partial(general_gossip_shard, axis=axis),
+            mesh=mesh,
+            in_specs=(P(axes), P(axes)),
+            out_specs=P(axes),
+        )(flat, mix)
+        if active is not None:
+            # jnp.where, not arithmetic blending: inactive rows stay
+            # bit-exact even if the gathered params carry NaN/Inf
+            a = (active > 0).reshape((-1,) + (1,) * (flat.ndim - 1))
+            out = jnp.where(a, out, flat.astype(out.dtype))
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(leaf, stacked_params)
+
+
 def make_sharded_gossip(mesh: Mesh, node_axes: tuple[str, ...], topology: str):
     """Returns gossip_fn(stacked_tree, mix or active) running under ``mesh``.
 
@@ -64,14 +127,17 @@ def make_sharded_gossip(mesh: Mesh, node_axes: tuple[str, ...], topology: str):
     ("pod", "data")).  Parameters' trailing dims stay as they were.
     """
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
+    n_shards = 1
+    for a in node_axes:
+        n_shards *= mesh.shape[a]
 
     if topology == "ring":
 
         def gossip(stacked: PyTree, active: jnp.ndarray) -> PyTree:
             def leaf(l):
                 flat = l.reshape(l.shape[0], -1)
-                out = jax.shard_map(
-                    partial(ring_gossip_shard, axis=axis),
+                out = _shard_map(
+                    partial(ring_gossip_shard, axis=axis, n_shards=n_shards),
                     mesh=mesh,
                     in_specs=(P(node_axes), P(node_axes)),
                     out_specs=P(node_axes),
@@ -83,16 +149,6 @@ def make_sharded_gossip(mesh: Mesh, node_axes: tuple[str, ...], topology: str):
         return gossip
 
     def gossip(stacked: PyTree, mix: jnp.ndarray) -> PyTree:
-        def leaf(l):
-            flat = l.reshape(l.shape[0], -1)
-            out = jax.shard_map(
-                partial(general_gossip_shard, axis=axis),
-                mesh=mesh,
-                in_specs=(P(node_axes), P(node_axes)),
-                out_specs=P(node_axes),
-            )(flat, mix)
-            return out.reshape(l.shape).astype(l.dtype)
-
-        return jax.tree.map(leaf, stacked)
+        return sharded_gossip_mix(stacked, mix, mesh=mesh, node_axes=node_axes)
 
     return gossip

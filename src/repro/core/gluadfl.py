@@ -15,10 +15,44 @@ Faithfulness notes (numbered lines refer to the paper's Algorithm 1):
   * Lines 15-16 — population model = uniform average of all node models.
 
 The whole federation is a stacked pytree (leaves ``(N, ...)``); one round
-is a single jitted function: mixing-matrix build -> gossip mix -> vmapped
+is a single pure function: mixing-matrix build -> gossip mix -> vmapped
 local step, all masked by the round's active vector.  Nodes therefore
 simulate wall-clock asynchrony exactly (inactive nodes are frozen), while
 the host sees a deterministic, reproducible program.
+
+Engine design (the training hot path)
+-------------------------------------
+``_round`` is a pure ``FLState -> (FLState, loss)`` body, which makes the
+multi-round engine a compiler problem rather than a host loop:
+
+  * **Chunked scan** — :meth:`train_chunk` runs ``chunk`` rounds as ONE
+    XLA program (``jax.lax.scan`` over ``_round``) and returns the
+    stacked ``(chunk,)`` per-round losses, so the host synchronizes once
+    per chunk instead of once per round.  The carried ``FLState`` buffers
+    are donated (``donate_argnums``), so N-node parameter/optimizer
+    state is updated in place across the whole chunk — no per-round
+    host dispatch, no per-round device<->host ``float(loss)`` sync, no
+    re-entry through the jit cache.
+  * **Loop fallback** — the original per-round Python loop survives as
+    ``engine="loop"`` and is selected automatically when an
+    ``eval_fn``/``eval_every`` callback needs the host between rounds
+    (debugging, streaming eval).  Same numerics, one dispatch per round.
+  * **Mixer modes** — the gossip contraction dispatches on ``mixer``:
+      - ``"tree"``     reference einsum per leaf (CPU default),
+      - ``"kernel"``   Pallas VMEM-blocked kernel (interpret on CPU); the
+        local-DP path fuses noise-broadcast + mix + clean-self-restore
+        into the kernel's single pass over the (N, D) matrix
+        (``gossip_mix_dp_kernel``) instead of three tree_maps,
+      - ``"sharded"``  ``core.distributed.sharded_gossip_mix`` under a
+        node-sharded mesh (``launch.mesh.make_federation_mesh``): the N
+        federation rows split across devices and the mix runs as a real
+        collective — the fleet-scale path, and it scans like the rest.
+
+All RNG is threaded through ``FLState.key`` so every engine/mixer
+combination consumes the identical key stream: ``train_chunk(chunk=k)``
+matches k sequential ``_round`` calls to float tolerance (tested in
+``tests/test_train_engine.py``), and inactive nodes stay bitwise frozen
+across a chunk.
 """
 from __future__ import annotations
 
@@ -28,16 +62,30 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import FLConfig
 from repro.core.async_sched import bernoulli_active, staleness_update
-from repro.core.gossip import gossip_mix_kernel, gossip_mix_tree
+from repro.core.gossip import (
+    gossip_mix_dp_kernel,
+    gossip_mix_kernel,
+    gossip_mix_tree,
+    sharded_gossip_mix,
+)
 from repro.core.topology import mixing_matrix, round_adjacency
 from repro.models.base import Model
 from repro.optim import Optimizer
 from repro.utils.pytree import tree_mean
+from repro.utils.rng import split_like
 
 PyTree = Any
+
+MIXERS = ("tree", "kernel", "sharded")
+
+# default scan-chunk length: long enough to amortize dispatch + the
+# once-per-chunk loss sync, short enough that the first-compile cost and
+# the host-side history granularity stay reasonable
+DEFAULT_CHUNK = 32
 
 
 @jax.tree_util.register_dataclass
@@ -61,15 +109,26 @@ class GluADFL:
         *,
         grad_at: str = "premix",
         use_kernel: bool = False,
+        mixer: str | None = None,
         dp_noise_sigma: float = 0.0,
         loss_fn: Callable | None = None,
+        mesh=None,
     ):
         assert grad_at in ("premix", "mixed")
+        if mixer is None:
+            mixer = "kernel" if use_kernel else "tree"
+        elif use_kernel and mixer != "kernel":
+            raise ValueError(
+                f"use_kernel=True contradicts mixer={mixer!r}; pass one or the other"
+            )
+        assert mixer in MIXERS, f"mixer {mixer!r} not in {MIXERS}"
         self.model = model
         self.optimizer = optimizer
         self.cfg = cfg
         self.grad_at = grad_at
-        self.use_kernel = use_kernel
+        self.mixer = mixer
+        self.use_kernel = mixer == "kernel"  # kept for back-compat introspection
+        self.mesh = mesh                     # optional explicit mesh for "sharded"
         # BEYOND-PAPER: local differential privacy on the broadcast —
         # Gaussian noise is added to the parameters a node SHARES (its
         # own copy stays clean), so neighbours only ever see a noised
@@ -80,6 +139,11 @@ class GluADFL:
             lambda p, x, y: jnp.mean(jnp.square(model.apply(p, x) - y))
         )
         self._round_jit = jax.jit(self._round, static_argnames=("batch_size",))
+        self._chunk_jit = jax.jit(
+            self._train_chunk,
+            static_argnames=("batch_size", "chunk"),
+            donate_argnums=(0,),
+        )
 
     # ------------------------------------------------------------------
     def init(self, key, example_x) -> FLState:
@@ -120,7 +184,41 @@ class GluADFL:
         return p, st, jnp.mean(losses)
 
     # ------------------------------------------------------------------
+    def _plain_mix(self, stacked: PyTree, mix: jnp.ndarray) -> PyTree:
+        """Mixer dispatch for the noise-free contraction (the mixing
+        matrix already carries identity rows for inactive nodes)."""
+        if self.mixer == "kernel":
+            return gossip_mix_kernel(stacked, mix)
+        if self.mixer == "sharded":
+            return sharded_gossip_mix(stacked, mix, mesh=self.mesh)
+        return gossip_mix_tree(stacked, mix)
+
+    def _gossip(self, premix: PyTree, mix: jnp.ndarray, active, k_dp) -> PyTree:
+        """Steps 2+3 (+ optional local-DP broadcast noise)."""
+        if self.dp_noise_sigma <= 0.0:
+            return self._plain_mix(premix, mix)
+        noise_keys = split_like(k_dp, premix)
+        noise = jax.tree.map(
+            lambda w, k_: self.dp_noise_sigma * jax.random.normal(k_, w.shape, w.dtype),
+            premix, noise_keys,
+        )
+        if self.mixer == "kernel":
+            # fused: noise + mix + clean-self-restore, one kernel pass
+            return gossip_mix_dp_kernel(premix, noise, mix, active)
+        # composed: neighbours mix the NOISED view; each node re-adds its
+        # own clean self-contribution (it never needs to noise itself)
+        shared = jax.tree.map(jnp.add, premix, noise)
+        mixed_noisy = self._plain_mix(shared, mix)
+        self_w = jnp.diagonal(mix)  # (N,)
+        return jax.tree.map(
+            lambda mn, z: mn - self_w.reshape((-1,) + (1,) * (z.ndim - 1)) * z,
+            mixed_noisy, noise,
+        )
+
+    # ------------------------------------------------------------------
     def _round(self, state: FLState, x, y, counts, *, batch_size: int):
+        """One FL round as a pure ``FLState -> (FLState, loss)`` body —
+        directly scannable (train_chunk) and jit-able (loop engine)."""
         cfg = self.cfg
         n = cfg.num_nodes
         key, k_act, k_top, k_batch = jax.random.split(state.key, 4)
@@ -130,38 +228,24 @@ class GluADFL:
         mix = mixing_matrix(adj, active, cfg.comm_batch)
 
         premix = state.params
-        mixer = gossip_mix_kernel if self.use_kernel else gossip_mix_tree
+        k_dp = None
         if self.dp_noise_sigma > 0.0:
             key, k_dp = jax.random.split(key)
-            from repro.utils.rng import split_like
-
-            noise_keys = split_like(k_dp, premix)
-            shared = jax.tree.map(
-                lambda w, k_: w + self.dp_noise_sigma * jax.random.normal(k_, w.shape, w.dtype),
-                premix, noise_keys,
-            )
-            # neighbours mix the NOISED view; each node re-adds its own
-            # clean self-contribution (it never needs to noise itself)
-            self_w = jnp.diagonal(mix)  # (N,)
-            mixed_noisy = mixer(shared, mix)
-            mixed = jax.tree.map(
-                lambda mn, sh, cl: mn
-                + self_w.reshape((-1,) + (1,) * (cl.ndim - 1)) * (cl - sh),
-                mixed_noisy, shared, premix,
-            )
-        else:
-            mixed = mixer(premix, mix)
+        mixed = self._gossip(premix, mix, active, k_dp)
 
         node_keys = jax.random.split(k_batch, n)
         new_params, new_opt, losses = jax.vmap(
             partial(self._local_step, batch_size=batch_size)
         )(node_keys, premix, mixed, state.opt_state, x, y, counts)
 
-        # inactive nodes keep their stale params / optimizer state
+        # inactive nodes keep their stale params / optimizer state.
+        # jnp.where (not arithmetic blending) so inactive rows are BITWISE
+        # copies and integer leaves (optimizer step) keep their dtype —
+        # the scan carry must be type-stable across rounds.
         def mask(new, old):
             bshape = (n,) + (1,) * (new.ndim - 1)
-            a = active.reshape(bshape)
-            return a * new + (1 - a) * old
+            a = active.reshape(bshape) > 0
+            return jnp.where(a, new, old)
 
         params = jax.tree.map(mask, new_params, premix)
         opt_state = jax.tree.map(
@@ -182,6 +266,26 @@ class GluADFL:
         )
 
     # ------------------------------------------------------------------
+    def _train_chunk(self, state: FLState, x, y, counts, *, batch_size: int, chunk: int):
+        def body(st, _):
+            return self._round(st, x, y, counts, batch_size=batch_size)
+
+        return jax.lax.scan(body, state, None, length=chunk)
+
+    def train_chunk(
+        self, state: FLState, x, y, counts, *, batch_size: int = 64, chunk: int = DEFAULT_CHUNK
+    ) -> tuple[FLState, jnp.ndarray]:
+        """Run ``chunk`` rounds as one compiled ``lax.scan`` program.
+
+        Returns ``(new_state, losses)`` with ``losses.shape == (chunk,)``
+        (per-round mean active loss, still on device — the caller decides
+        when to sync).  The input ``state``'s buffers are DONATED: do not
+        reuse it after the call.  Recompiles once per distinct
+        ``(batch_size, chunk)`` pair.
+        """
+        return self._chunk_jit(state, x, y, counts, batch_size=batch_size, chunk=chunk)
+
+    # ------------------------------------------------------------------
     def train(
         self,
         key,
@@ -193,20 +297,50 @@ class GluADFL:
         rounds: int | None = None,
         eval_every: int = 0,
         eval_fn: Callable[[PyTree], dict] | None = None,
+        chunk: int | None = None,
+        engine: str = "scan",
     ):
-        """Run T rounds (python loop of a jitted round); returns
-        (population_params, history)."""
+        """Run T rounds; returns (population_params, history, state).
+
+        ``engine="scan"`` (default) runs chunked ``train_chunk`` programs
+        and syncs losses once per chunk; ``engine="loop"`` is the
+        per-round Python-loop fallback, selected automatically when an
+        ``eval_every``/``eval_fn`` callback needs the host between
+        rounds.  History is identical either way: one record per round.
+        """
+        assert engine in ("scan", "loop"), engine
         rounds = rounds if rounds is not None else self.cfg.rounds
         x, y = jnp.asarray(x), jnp.asarray(y)
         counts = jnp.asarray(counts)
         state = self.init(key, x[0, :1])
         history: list[dict] = []
-        for t in range(rounds):
+
+        if engine == "loop" or (eval_every and eval_fn is not None):
+            for t in range(rounds):
+                state, loss = self._round_jit(state, x, y, counts, batch_size=batch_size)
+                rec = {"round": t, "loss": float(loss)}
+                if eval_every and eval_fn and (t + 1) % eval_every == 0:
+                    rec.update(eval_fn(self.population(state)))
+                history.append(rec)
+            return self.population(state), history, state
+
+        chunk = max(1, min(chunk or DEFAULT_CHUNK, rounds))
+        full, rem = divmod(rounds, chunk)
+        t = 0
+        for _ in range(full):
+            state, losses = self.train_chunk(
+                state, x, y, counts, batch_size=batch_size, chunk=chunk
+            )
+            # ONE host sync per chunk (vs one per round in the loop engine)
+            for i, lv in enumerate(np.asarray(losses).tolist()):
+                history.append({"round": t + i, "loss": lv})
+            t += chunk
+        # drain the tail through the per-round jit: rem < chunk rounds are
+        # not worth compiling a second whole-scan program for
+        for _ in range(rem):
             state, loss = self._round_jit(state, x, y, counts, batch_size=batch_size)
-            rec = {"round": t, "loss": float(loss)}
-            if eval_every and eval_fn and (t + 1) % eval_every == 0:
-                rec.update(eval_fn(self.population(state)))
-            history.append(rec)
+            history.append({"round": t, "loss": float(loss)})
+            t += 1
         return self.population(state), history, state
 
     # ------------------------------------------------------------------

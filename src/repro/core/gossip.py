@@ -38,3 +38,31 @@ def gossip_mix_kernel(stacked_params: PyTree, mix: jnp.ndarray, active=None) -> 
         return out.reshape(l.shape).astype(l.dtype)
 
     return jax.tree.map(mix_leaf, stacked_params)
+
+
+def gossip_mix_dp_kernel(
+    stacked_params: PyTree, noise: PyTree, mix: jnp.ndarray, active=None
+) -> PyTree:
+    """Fused local-DP gossip (Pallas): noise-broadcast + mix +
+    clean-self-restore in ONE pass per leaf —
+    ``out = mix @ (w + noise) - diag(mix) * noise`` — instead of the
+    three tree_map passes of the composed path.  ``noise`` is a pytree
+    shaped like ``stacked_params`` (already scaled by sigma)."""
+    from repro.kernels.ops import gossip_mix_dp as _kernel_dp
+
+    import jax
+
+    def mix_leaf(l, z):
+        flat = l.reshape(l.shape[0], -1)
+        out = _kernel_dp(mix, flat, z.reshape(z.shape[0], -1), active)
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(mix_leaf, stacked_params, noise)
+
+
+def sharded_gossip_mix(stacked_params: PyTree, mix: jnp.ndarray, active=None, **kw) -> PyTree:
+    """Device-parallel implementation (re-export; see
+    :func:`repro.core.distributed.sharded_gossip_mix`)."""
+    from repro.core.distributed import sharded_gossip_mix as _sharded
+
+    return _sharded(stacked_params, mix, active, **kw)

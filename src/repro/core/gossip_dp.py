@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.topology import mixing_matrix, round_adjacency
+from repro.utils.compat import shard_map as _shard_map
 
 PyTree = Any
 
@@ -70,7 +71,7 @@ def gossip_mix_params(
             summed = jax.lax.psum(contrib, axis)  # (N, ...) mixed for all nodes
             return summed[idx]
 
-        return jax.shard_map(
+        return _shard_map(
             body,
             mesh=mesh,
             in_specs=(P(*_param_spec(w, mesh)), P()),
@@ -107,7 +108,7 @@ def ring_mix_params(params: PyTree, mesh: Mesh, node_axes: tuple[str, ...],
             w_next = jax.lax.ppermute(w_local, axis, bwd)
             return (w_local + w_prev + w_next) / 3.0
 
-        return jax.shard_map(
+        return _shard_map(
             body, mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False
         )(w)
 

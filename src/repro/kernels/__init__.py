@@ -5,4 +5,4 @@
 #                   shapes of the assigned Mistral-family/hybrid archs)
 # Each kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py oracle,
 # ops.py jit'd wrapper (padding + CPU-interpret/TPU dispatch).
-from repro.kernels.ops import gossip_mix, lstm_cell, swa_attention
+from repro.kernels.ops import gossip_mix, gossip_mix_dp, lstm_cell, swa_attention

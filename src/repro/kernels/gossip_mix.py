@@ -16,6 +16,13 @@ Grid: one program per D-tile.  BlockSpecs:
   out    (N, TILE_D).
 
 N is padded to the 8-lane sublane multiple by the wrapper (ops.py).
+
+The local-DP variant (``gossip_mix_dp_pallas``) fuses the whole DP
+broadcast — noise-add, mix, clean-self-restore — into the same single
+pass: ``out = M @ (W + Z) - diag(M) * Z`` (each node shares a noised
+view but re-adds its own clean self-contribution), so the (N, D) matrix
+is still streamed through VMEM exactly once instead of the three
+tree_map passes the unfused path takes.
 """
 from __future__ import annotations
 
@@ -65,3 +72,52 @@ def gossip_mix_pallas(
         out_shape=jax.ShapeDtypeStruct((n, d), w.dtype),
         interpret=interpret,
     )(mix.astype(jnp.float32), w, act2)
+
+
+def _dp_kernel(mix_ref, w_ref, noise_ref, self_w_ref, act_ref, out_ref):
+    mix = mix_ref[...]                              # (N, N) f32, VMEM-resident
+    w = w_ref[...].astype(jnp.float32)              # (N, TILE_D)
+    noise = noise_ref[...].astype(jnp.float32)      # (N, TILE_D)
+    self_w = self_w_ref[...]                        # (N, 1) = diag(mix), grid-
+    act = act_ref[...]                              # (N, 1)   invariant, hoisted
+    mixed = jnp.dot(mix, w + noise, preferred_element_type=jnp.float32)
+    out = mixed - self_w * noise                    # clean-self-restore
+    # where-select, not arithmetic blend: inactive rows stay bit-exact
+    # copies even when active rows hold NaN/Inf (diverging runs)
+    out = jnp.where(act > 0, out, w)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix_dp_pallas(
+    mix: jnp.ndarray,
+    w: jnp.ndarray,
+    noise: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused local-DP gossip: ``M @ (W + Z) - diag(M) * Z`` with the
+    active-mask select, one VMEM pass.  Shapes as gossip_mix_pallas plus
+    noise (N, D); D % TILE_D == 0 (ops.py pads)."""
+    n, d = w.shape
+    assert d % TILE_D == 0, d
+    assert noise.shape == w.shape, (noise.shape, w.shape)
+    grid = (d // TILE_D,)
+    act2 = active.astype(jnp.float32).reshape(n, 1)
+    mix32 = mix.astype(jnp.float32)
+    self_w = jnp.diagonal(mix32).reshape(n, 1)  # grid-invariant: once, not per tile
+    return pl.pallas_call(
+        _dp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), w.dtype),
+        interpret=interpret,
+    )(mix32, w, noise.astype(w.dtype), self_w, act2)

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gossip_mix import TILE_D, gossip_mix_pallas
+from repro.kernels.gossip_mix import TILE_D, gossip_mix_dp_pallas, gossip_mix_pallas
 from repro.kernels.lstm_cell import TILE_B, TILE_H, lstm_cell_pallas
 from repro.kernels.swa_attention import TILE_Q, swa_attention_pallas
 
@@ -40,6 +40,24 @@ def gossip_mix(mix: jnp.ndarray, w: jnp.ndarray, active=None) -> jnp.ndarray:
     ap = _pad_to(active.astype(jnp.float32), 0, 8)
     wp = _pad_to(wp, 1, TILE_D)
     out = gossip_mix_pallas(mp, wp, ap, interpret=not _on_tpu())
+    return out[:n, :d]
+
+
+def gossip_mix_dp(mix: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray, active=None) -> jnp.ndarray:
+    """Fused local-DP gossip ``out = mix @ (w + noise) - diag(mix) * noise``
+    with the active-mask select (inactive rows bit-exact copies of ``w``).
+
+    mix (N, N), w/noise (N, D), active optional (N,).  Same padding and
+    interpret/compiled dispatch as :func:`gossip_mix`.
+    """
+    n, d = w.shape
+    if active is None:
+        active = jnp.ones((n,), jnp.float32)
+    wp = _pad_to(_pad_to(w, 0, 8), 1, TILE_D)
+    zp = _pad_to(_pad_to(noise, 0, 8), 1, TILE_D)
+    mp = _pad_to(_pad_to(mix, 0, 8), 1, 8)
+    ap = _pad_to(active.astype(jnp.float32), 0, 8)
+    out = gossip_mix_dp_pallas(mp, wp, zp, ap, interpret=not _on_tpu())
     return out[:n, :d]
 
 

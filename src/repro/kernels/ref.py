@@ -18,6 +18,19 @@ def gossip_mix_ref(mix: jnp.ndarray, w: jnp.ndarray, active=None) -> jnp.ndarray
     return out.astype(w.dtype)
 
 
+def gossip_mix_dp_ref(mix: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray, active=None) -> jnp.ndarray:
+    """Fused local-DP gossip oracle: every node broadcasts a noised view
+    but re-adds its own clean self-contribution —
+    ``out = mix @ (w + noise) - diag(mix) * noise``."""
+    shared = w.astype(jnp.float32) + noise.astype(jnp.float32)
+    mixed = jnp.einsum("nm,md->nd", mix.astype(jnp.float32), shared)
+    out = mixed - jnp.diagonal(mix).astype(jnp.float32)[:, None] * noise.astype(jnp.float32)
+    if active is not None:
+        a = active.astype(jnp.float32)[:, None]
+        out = a * out + (1 - a) * w.astype(jnp.float32)
+    return out.astype(w.dtype)
+
+
 def lstm_cell_ref(x_t, h, c, wx, wh, b):
     """Fused LSTM cell (gates i, f, g, o).  Shapes:
     x_t (B, I), h/c (B, H), wx (I, 4H), wh (H, 4H), b (4H,)."""

@@ -266,7 +266,8 @@ def dryrun_one(arch_name: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    from repro.utils.compat import cost_analysis
+    cost = cost_analysis(compiled)
     hlo = compiled.as_text()
     colls = collective_schedule(hlo)
     n_dev = len(mesh.devices.reshape(-1))

@@ -25,6 +25,16 @@ def make_test_mesh(devices: int | None = None):
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_federation_mesh(num_nodes: int, *, devices: int | None = None):
+    """Node-sharded 1-axis mesh for device-parallel gossip: the stacked
+    federation axis N is split over the largest available device count
+    that divides it (shard_map needs N % devices == 0).  Falls back to a
+    single-device mesh, which degenerates to the local contraction."""
+    avail = devices or len(jax.devices())
+    width = max(k for k in range(1, avail + 1) if num_nodes % k == 0)
+    return jax.make_mesh((width,), ("node",))
+
+
 def make_gossip_dp_mesh(*, nodes: int = 4, multi_pod: bool = False):
     """Mesh view for gossip data-parallelism (DESIGN.md §4): the data
     axis is split into (node, data) so each federated node is a

@@ -52,6 +52,14 @@ def main():
                     help="6-day synthetic series (CI scale)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas gossip-mix kernel (interpret mode on CPU)")
+    ap.add_argument("--mixer", default=None, choices=["tree", "kernel", "sharded"],
+                    help="gossip mixer: tree (einsum), kernel (Pallas), "
+                         "sharded (node-sharded mesh collective); default "
+                         "tree, or kernel when --use-kernel")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="rounds per compiled lax.scan chunk (host syncs "
+                         "once per chunk); 0 = per-round python loop; "
+                         "default: gluadfl.DEFAULT_CHUNK")
     ap.add_argument("--out", default="experiments/checkpoints")
     ap.add_argument("overrides", nargs="*", help="cfg overrides a.b=c")
     args = ap.parse_args()
@@ -71,10 +79,12 @@ def main():
         rounds=args.rounds, inactive_ratio=args.inactive_ratio,
     )
     trainer = GluADFL(model, get_optimizer(cfg.train.optimizer, cfg.train.lr),
-                      fl_cfg, use_kernel=args.use_kernel)
+                      fl_cfg, use_kernel=args.use_kernel, mixer=args.mixer)
     pop, hist, state = trainer.train(
         jax.random.PRNGKey(cfg.fl.seed), fed.x, fed.y, fed.counts,
         batch_size=cfg.train.batch_size,
+        engine="loop" if args.chunk == 0 else "scan",
+        chunk=args.chunk or None,
     )
     print(f"round 0 loss {hist[0]['loss']:.4f} -> round {args.rounds-1} "
           f"loss {hist[-1]['loss']:.4f}")

@@ -1,0 +1,36 @@
+"""JAX version-compat shims.
+
+The container pins an older jax; newer code in this repo is written
+against the current API.  Everything that moved between versions is
+funneled through here so call sites stay clean.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.5 exports it at top level
+    _shard_map_impl = jax.shard_map
+except AttributeError:  # 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_KW = set(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` across versions (``check_vma`` was ``check_rep``)."""
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if check_vma is not None:
+        flag = "check_vma" if "check_vma" in _SHARD_MAP_KW else "check_rep"
+        kw[flag] = check_vma
+    return _shard_map_impl(f, **kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across versions: 0.4.x returns a
+    one-element list of dicts, newer jax a plain dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

@@ -5,8 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import gossip_mix, lstm_cell, swa_attention
-from repro.kernels.ref import gossip_mix_ref, lstm_cell_ref, swa_attention_ref
+from repro.kernels.ops import gossip_mix, gossip_mix_dp, lstm_cell, swa_attention
+from repro.kernels.ref import (
+    gossip_mix_dp_ref,
+    gossip_mix_ref,
+    lstm_cell_ref,
+    swa_attention_ref,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -50,6 +55,47 @@ def test_gossip_mix_identity():
     w = jax.random.normal(jax.random.PRNGKey(0), (n, d))
     out = gossip_mix(jnp.eye(n), w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(w), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gossip_mix_dp (fused noise-broadcast + mix + clean-self-restore)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d", [(5, 64), (12, 130), (25, 700)])
+@pytest.mark.parametrize("inactive_frac", [0.0, 0.4])
+def test_gossip_mix_dp_sweep(n, d, inactive_frac):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(n * 100 + d), 4)
+    mix = jax.nn.softmax(jax.random.normal(k1, (n, n)), axis=-1)
+    w = jax.random.normal(k2, (n, d))
+    noise = 0.1 * jax.random.normal(k3, (n, d))
+    active = (jax.random.uniform(k4, (n,)) >= inactive_frac).astype(jnp.float32)
+    out = gossip_mix_dp(mix, w, noise, active)
+    ref = gossip_mix_dp_ref(mix, w, noise, active)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # inactive rows bypass both noise and mix: bit-exact copies
+    for i in np.where(np.asarray(active) == 0)[0]:
+        np.testing.assert_array_equal(np.asarray(out)[i], np.asarray(w)[i])
+
+
+def test_gossip_mix_dp_zero_noise_equals_plain():
+    """sigma=0 collapses the fused kernel to the vanilla contraction."""
+    n, d = 9, 300
+    mix = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3), (n, n)), axis=-1)
+    w = jax.random.normal(jax.random.PRNGKey(4), (n, d))
+    out = gossip_mix_dp(mix, w, jnp.zeros_like(w))
+    ref = gossip_mix(mix, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_gossip_mix_dp_self_contribution_clean():
+    """With an identity mix every node keeps EXACTLY its clean params —
+    the noise it broadcast never contaminates itself."""
+    n, d = 8, 128
+    w = jax.random.normal(jax.random.PRNGKey(5), (n, d))
+    noise = jax.random.normal(jax.random.PRNGKey(6), (n, d))
+    out = gossip_mix_dp(jnp.eye(n), w, noise)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w), atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,184 @@
+"""Scan-compiled training engine tests: train_chunk vs the per-round
+loop, engine regression (history/population), and the bitwise freeze of
+inactive nodes across a whole chunk."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import GluADFL
+from repro.models import LSTMModel
+from repro.optim import adam, sgd
+from repro.utils.pytree import tree_l2_norm, tree_sub
+
+
+def _toy_fed(n=6, m=40, L=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, m, L)).astype(np.float32)
+    w_true = rng.normal(size=(L,)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(size=(n, m)).astype(np.float32)
+    counts = np.full((n,), m, np.int32)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
+
+
+def _state_allclose(a, b, atol=1e-6):
+    np.testing.assert_array_equal(np.asarray(a.key), np.asarray(b.key))
+    assert int(a.round) == int(b.round)
+    np.testing.assert_allclose(np.asarray(a.staleness), np.asarray(b.staleness))
+    for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+    for la, lb in zip(jax.tree.leaves(a.opt_state), jax.tree.leaves(b.opt_state)):
+        np.testing.assert_allclose(
+            np.asarray(la, np.float32), np.asarray(lb, np.float32), atol=atol
+        )
+
+
+@pytest.mark.parametrize("grad_at", ["premix", "mixed"])
+@pytest.mark.parametrize("dp_sigma", [0.0, 0.05])
+def test_train_chunk_matches_k_rounds(grad_at, dp_sigma):
+    """train_chunk(chunk=k) == k sequential _round calls: same key, same
+    data, same FLState to float32 tolerance (incl. DP-noise and the
+    mixed-gradient ablation)."""
+    k = 5
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="random", num_nodes=6, rounds=k,
+                   comm_batch=3, inactive_ratio=0.3)
+    tr = GluADFL(m, sgd(1e-2), cfg, grad_at=grad_at, dp_noise_sigma=dp_sigma)
+
+    s_loop = tr.init(jax.random.PRNGKey(0), x[0, :1])
+    loop_losses = []
+    for _ in range(k):
+        s_loop, loss = tr._round_jit(s_loop, x, y, counts, batch_size=8)
+        loop_losses.append(float(loss))
+
+    s0 = tr.init(jax.random.PRNGKey(0), x[0, :1])
+    s_chunk, losses = tr.train_chunk(s0, x, y, counts, batch_size=8, chunk=k)
+
+    assert losses.shape == (k,)
+    np.testing.assert_allclose(np.asarray(losses), loop_losses, atol=1e-6)
+    _state_allclose(s_loop, s_chunk)
+
+
+@pytest.mark.parametrize("mixer", ["tree", "kernel"])
+def test_train_chunk_matches_k_rounds_all_mixers(mixer):
+    """The chunk/loop equivalence holds per mixer (the sharded mixer is
+    covered under a multi-device mesh in test_distributed.py)."""
+    k = 4
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=k)
+    tr = GluADFL(m, sgd(1e-2), cfg, mixer=mixer, dp_noise_sigma=0.02)
+    s_loop = tr.init(jax.random.PRNGKey(1), x[0, :1])
+    for _ in range(k):
+        s_loop, _ = tr._round_jit(s_loop, x, y, counts, batch_size=8)
+    s0 = tr.init(jax.random.PRNGKey(1), x[0, :1])
+    s_chunk, _ = tr.train_chunk(s0, x, y, counts, batch_size=8, chunk=k)
+    _state_allclose(s_loop, s_chunk)
+
+
+def test_train_scan_engine_matches_loop_engine():
+    """Regression: the engine refactor changes throughput, not results —
+    round count, history length, per-round losses, and the population
+    average are identical between engines."""
+    rounds = 9
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="random", num_nodes=6, rounds=rounds, comm_batch=3)
+    tr = GluADFL(m, adam(5e-3), cfg)
+    pop_s, hist_s, st_s = tr.train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8, chunk=4
+    )
+    pop_l, hist_l, st_l = tr.train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8, engine="loop"
+    )
+    assert len(hist_s) == len(hist_l) == rounds
+    assert [h["round"] for h in hist_s] == list(range(rounds))
+    for hs, hl in zip(hist_s, hist_l):
+        assert abs(hs["loss"] - hl["loss"]) < 1e-6
+    assert int(st_s.round) == int(st_l.round) == rounds
+    assert float(tree_l2_norm(tree_sub(pop_s, pop_l))) < 1e-6
+
+
+def test_eval_callback_falls_back_to_loop():
+    """An eval_fn needs the host between rounds: train() must still honor
+    it (the loop fallback) with per-round history intact."""
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=6)
+    tr = GluADFL(m, sgd(1e-2), cfg)
+    calls = []
+    pop, hist, _ = tr.train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8,
+        eval_every=2, eval_fn=lambda p: calls.append(1) or {"evald": len(calls)},
+    )
+    assert len(hist) == 6 and len(calls) == 3
+    assert hist[1]["evald"] == 1 and hist[5]["evald"] == 3
+
+
+def test_inactive_nodes_bitwise_frozen_across_chunk():
+    """Nodes that sit out every round of a chunk keep params AND
+    optimizer state bit-for-bit (staleness == chunk identifies them)."""
+    k = 6
+    n = 8
+    x, y, counts = _toy_fed(n=n)
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="random", num_nodes=n, rounds=k,
+                   comm_batch=3, inactive_ratio=0.85)
+    tr = GluADFL(m, adam(5e-3), cfg)
+    # seed chosen so this activity stream strands 2 of 8 nodes for all 6
+    # rounds (deterministic given the key)
+    s0 = tr.init(jax.random.PRNGKey(2), x[0, :1])
+    p_before = jax.tree.map(np.asarray, s0.params)
+    o_before = jax.tree.map(np.asarray, s0.opt_state)
+    s1, _ = tr.train_chunk(s0, x, y, counts, batch_size=8, chunk=k)
+
+    frozen = np.asarray(s1.staleness) >= k  # never active in the chunk
+    assert frozen.any(), "inactive_ratio=0.85 over 6 rounds should strand a node"
+    assert not frozen.all()
+    for before, after in zip(jax.tree.leaves(p_before), jax.tree.leaves(s1.params)):
+        np.testing.assert_array_equal(before[frozen], np.asarray(after)[frozen])
+    for before, after in zip(jax.tree.leaves(o_before), jax.tree.leaves(s1.opt_state)):
+        before = np.asarray(before)
+        if before.ndim >= 1 and before.shape[0] == n:
+            np.testing.assert_array_equal(before[frozen], np.asarray(after)[frozen])
+
+
+def test_use_kernel_mixer_conflict_rejected():
+    """use_kernel=True with a contradicting explicit mixer must raise,
+    not silently pick one."""
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(num_nodes=4, rounds=1)
+    with pytest.raises(ValueError, match="use_kernel"):
+        GluADFL(m, sgd(1e-2), cfg, use_kernel=True, mixer="tree")
+    # compatible spellings still work
+    assert GluADFL(m, sgd(1e-2), cfg, use_kernel=True).mixer == "kernel"
+    assert GluADFL(m, sgd(1e-2), cfg, use_kernel=True, mixer="kernel").mixer == "kernel"
+
+
+def test_scan_carry_is_type_stable():
+    """The optimizer step counter must stay int32 through the masked
+    update — a float-promoting mask would break the scan carry."""
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=2, inactive_ratio=0.4)
+    tr = GluADFL(m, adam(5e-3), cfg)
+    s0 = tr.init(jax.random.PRNGKey(0), x[0, :1])
+    dtypes0 = [l.dtype for l in jax.tree.leaves(s0.opt_state)]
+    s1, _ = tr.train_chunk(s0, x, y, counts, batch_size=8, chunk=2)
+    assert [l.dtype for l in jax.tree.leaves(s1.opt_state)] == dtypes0
+
+
+def test_train_chunk_remainder_and_default_chunk():
+    """rounds not divisible by chunk: the tail chunk still runs and the
+    history covers every round exactly once."""
+    x, y, counts = _toy_fed()
+    m = LSTMModel(hidden=8).as_model()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=7)
+    tr = GluADFL(m, sgd(1e-2), cfg)
+    pop, hist, st = tr.train(jax.random.PRNGKey(0), x, y, counts,
+                             batch_size=8, chunk=3)
+    assert [h["round"] for h in hist] == list(range(7))
+    assert int(st.round) == 7
+    assert all(np.isfinite(h["loss"]) for h in hist)
