@@ -1,0 +1,127 @@
+"""Bench-regression gate: compare a fresh ``rounds_per_sec.py`` run
+against the committed baseline ``BENCH_rounds_per_sec.json`` and fail
+(exit 1) on a >20% regression.
+
+What is gated
+-------------
+CI runners are heterogeneous (the committed baseline was produced on a
+different machine than the PR run), so absolute rounds/sec are noise.
+The gate therefore compares MACHINE-PORTABLE ratios by default — each
+engine's speedup over the loop engine measured in the SAME process:
+
+  * per-engine ``rounds_per_sec[e] / rounds_per_sec["loop"]`` must not
+    drop more than ``--threshold`` (default 0.2) below the baseline's
+    ratio — this is exactly "the compiled path lost its speed";
+  * ``scan_eval_relative_throughput`` (scan-eval / scan) must stay
+    >= 0.9: the in-scan streaming eval is supposed to be ~free.
+
+``--absolute`` additionally gates raw rounds/sec (same-machine
+comparisons, e.g. a perf bisect on one box).
+
+Usage:
+    python benchmarks/check_bench_regression.py \
+        [--fresh experiments/paper/rounds_per_sec.json] \
+        [--baseline BENCH_rounds_per_sec.json] \
+        [--threshold 0.2] [--absolute] [--update]
+
+``--update`` rewrites the baseline from the fresh run (for deliberate
+re-baselining commits) instead of checking.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+# acceptance target: scan-eval within 10% of scan.  Ratios are best-of-3
+# in one process, but shared CI runners still jitter — if a green-history
+# runner class starts flaking here with no code change, loosen via
+# --eval-floor (and/or --threshold) in the workflow rather than deleting
+# the gate.
+DEFAULT_EVAL_FLOOR = 0.9
+
+
+def _ratios(report: dict) -> dict[str, float]:
+    rps = report["rounds_per_sec"]
+    loop = rps.get("loop")
+    if not loop:
+        raise SystemExit("report has no loop-engine rounds/sec to normalize by")
+    return {e: v / loop for e, v in rps.items() if e != "loop"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh",
+                    default=str(ROOT / "experiments/paper/rounds_per_sec.json"))
+    ap.add_argument("--baseline",
+                    default=str(ROOT / "BENCH_rounds_per_sec.json"))
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max allowed fractional drop vs baseline")
+    ap.add_argument("--eval-floor", type=float, default=DEFAULT_EVAL_FLOOR,
+                    help="min allowed scan-eval/scan relative throughput")
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate raw rounds/sec (same-machine runs only)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh run")
+    args = ap.parse_args(argv)
+
+    fresh = json.loads(Path(args.fresh).read_text())
+    if args.update:
+        Path(args.baseline).write_text(json.dumps(fresh, indent=2) + "\n")
+        print(f"baseline updated -> {args.baseline}")
+        return 0
+
+    base = json.loads(Path(args.baseline).read_text())
+    failures: list[str] = []
+
+    base_r, fresh_r = _ratios(base), _ratios(fresh)
+    for engine, b in sorted(base_r.items()):
+        f = fresh_r.get(engine)
+        if f is None:
+            failures.append(f"engine {engine!r} present in baseline but "
+                            f"missing from the fresh run")
+            continue
+        floor = b * (1.0 - args.threshold)
+        verdict = "FAIL" if f < floor else "ok"
+        print(f"{engine:>20s}: speedup-vs-loop {f:6.2f}x "
+              f"(baseline {b:6.2f}x, floor {floor:6.2f}x) {verdict}")
+        if f < floor:
+            failures.append(
+                f"{engine}: speedup-vs-loop {f:.2f}x fell >"
+                f"{args.threshold:.0%} below baseline {b:.2f}x")
+
+    rel = fresh.get("scan_eval_relative_throughput")
+    if rel is not None:
+        verdict = "FAIL" if rel < args.eval_floor else "ok"
+        print(f"{'scan-eval/scan':>20s}: {rel:6.3f} "
+              f"(floor {args.eval_floor}) {verdict}")
+        if rel < args.eval_floor:
+            failures.append(
+                f"streaming eval costs {1 - rel:.0%} of scan throughput "
+                f"(floor {args.eval_floor})")
+
+    if args.absolute:
+        for engine, b in sorted(base["rounds_per_sec"].items()):
+            f = fresh["rounds_per_sec"].get(engine, 0.0)
+            floor = b * (1.0 - args.threshold)
+            verdict = "FAIL" if f < floor else "ok"
+            print(f"{engine:>20s}: {f:8.2f} rps "
+                  f"(baseline {b:8.2f}, floor {floor:8.2f}) {verdict}")
+            if f < floor:
+                failures.append(
+                    f"{engine}: {f:.2f} rounds/sec fell >"
+                    f"{args.threshold:.0%} below baseline {b:.2f}")
+
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

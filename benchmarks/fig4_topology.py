@@ -22,12 +22,14 @@ def run(scale: Scale | None = None, datasets=None, eval_every: int = 10) -> dict
     for ds in datasets:
         fed = load(ds, scale)
         model = LSTMModel(hidden=scale.hidden).as_model()
-        vx = jnp.asarray(np.concatenate([p.val_x for p in fed.patients]))
+        vx = np.concatenate([p.val_x for p in fed.patients])
         vy_raw = np.concatenate([(p.val_y * fed.sd + fed.mean) for p in fed.patients])
 
-        def val_rmse(params):
-            pred = np.asarray(model.apply(params, vx)) * fed.sd + fed.mean
-            return {"val_rmse": float(np.sqrt(np.mean((pred - vy_raw) ** 2)))}
+        # traceable (mg/dL) val RMSE: runs INSIDE the scanned chunk via
+        # the streaming-eval branch — no per-round host sync
+        def val_rmse(params, val_x, val_y):
+            pred = model.apply(params, val_x) * fed.sd + fed.mean
+            return {"val_rmse": jnp.sqrt(jnp.mean(jnp.square(pred - val_y)))}
 
         out[ds] = {}
         for topo in TOPOLOGIES:
@@ -36,7 +38,8 @@ def run(scale: Scale | None = None, datasets=None, eval_every: int = 10) -> dict
             tr = GluADFL(model, adam(2e-3), cfg)
             _, hist, _ = tr.train(
                 jax.random.PRNGKey(0), fed.x, fed.y, fed.counts,
-                batch_size=scale.batch_size, eval_every=eval_every, eval_fn=val_rmse,
+                batch_size=scale.batch_size, eval_every=eval_every,
+                eval_fn=val_rmse, val_data=(vx, vy_raw),
             )
             curve = [(h["round"], h["val_rmse"]) for h in hist if "val_rmse" in h]
             out[ds][topo] = curve

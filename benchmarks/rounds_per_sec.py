@@ -1,21 +1,32 @@
 """Training-engine throughput benchmark: rounds/sec of the GluADFL hot
-path under its three execution strategies.
+path under its execution strategies.
 
-  * loop          — the original per-round Python loop: one jit dispatch
-                    and one device->host ``float(loss)`` sync per round;
+  * loop          — the per-round Python-loop DEBUG fallback: one jit
+                    dispatch and one device->host ``float(loss)`` sync
+                    per round;
   * scan          — ``train_chunk``: the whole chunk is ONE ``lax.scan``
                     program with donated FLState buffers, host syncs the
                     stacked losses once per chunk;
-  * sharded-scan  — scan engine with ``mixer="sharded"``: the federation
-                    axis split over devices, gossip as a real collective
-                    (needs >1 device; this script forces an 8-device CPU
-                    topology when XLA_FLAGS isn't already set).
+  * scan-eval     — scan engine with the in-scan streaming-eval branch
+                    armed (``--eval-every``): val RMSE of the population
+                    model computed under ``lax.cond`` at boundaries.
+                    The claim under test: within ~10% of plain scan;
+  * sharded-scan  — scan engine with ``mixer="sharded"`` (allgather
+                    impl): the federation axis split over devices,
+                    gossip as a real collective (needs >1 device; this
+                    script forces an 8-device CPU topology when
+                    XLA_FLAGS isn't already set);
+  * sharded-psum-scan — same, with ``gossip_impl="psum"``: the
+                    memory-scaled reduce-scatter schedule.
 
 Usage:
     PYTHONPATH=src python benchmarks/rounds_per_sec.py \
-        [--nodes 32] [--rounds 64] [--hidden 16] [--batch 16] [--chunk 32]
+        [--nodes 32] [--rounds 64] [--hidden 16] [--batch 16] \
+        [--chunk 32] [--eval-every 8]
 
-Writes experiments/paper/rounds_per_sec.json and prints one CSV line per
+Writes experiments/paper/rounds_per_sec.json (the bench-regression gate
+compares this against the committed BENCH_rounds_per_sec.json baseline —
+see benchmarks/check_bench_regression.py) and prints one CSV line per
 engine: ``engine,rounds_per_sec,speedup_vs_loop``.
 """
 from __future__ import annotations
@@ -45,7 +56,8 @@ def synth_federation(n: int, m: int, hist_len: int, seed: int = 0):
 
 
 def bench_engine(trainer, x, y, counts, *, rounds: int, batch_size: int,
-                 chunk: int, engine: str, reps: int = 3) -> float:
+                 chunk: int, engine: str, eval_every: int = 0,
+                 val_data=None, reps: int = 3) -> float:
     """Returns steady-state rounds/sec: best of ``reps`` timed runs
     (compile excluded via warmup; best-of defends against noisy shared
     CPUs — the engines' ordering, not absolute numbers, is the claim)."""
@@ -54,6 +66,12 @@ def bench_engine(trainer, x, y, counts, *, rounds: int, batch_size: int,
 
     x, y = jnp.asarray(x), jnp.asarray(y)
     counts = jnp.asarray(counts)
+    eval_kw = {}
+    if eval_every and val_data is not None:
+        eval_kw = dict(
+            val_x=jnp.asarray(val_data[0]), val_y=jnp.asarray(val_data[1]),
+            eval_every=eval_every, eval_fn=trainer._resolve_eval_fn(None),
+        )
 
     def run(state):
         if engine == "loop":
@@ -66,10 +84,12 @@ def bench_engine(trainer, x, y, counts, *, rounds: int, batch_size: int,
             t = 0
             while t < rounds:
                 c = min(chunk, rounds - t)
-                state, losses = trainer.train_chunk(
-                    state, x, y, counts, batch_size=batch_size, chunk=c
+                state, aux = trainer.train_chunk(
+                    state, x, y, counts, batch_size=batch_size, chunk=c,
+                    **eval_kw,
                 )
-                np.asarray(losses)  # one sync per chunk
+                # one sync per chunk (losses, plus eval records if armed)
+                jax.tree.map(np.asarray, aux)
                 t += c
         jax.block_until_ready(state.params)
 
@@ -91,7 +111,7 @@ def bench_engine(trainer, x, y, counts, *, rounds: int, batch_size: int,
     return best
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nodes", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=64)
@@ -99,8 +119,11 @@ def main():
     ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--eval-every", type=int, default=8,
+                    help="streaming-eval cadence for the scan-eval row "
+                         "(0 disables the row)")
     ap.add_argument("--topology", default="random")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     import jax
 
@@ -110,36 +133,51 @@ def main():
     from repro.optim import sgd
 
     print(f"devices={len(jax.devices())} nodes={args.nodes} rounds={args.rounds} "
-          f"chunk={args.chunk} hidden={args.hidden}")
+          f"chunk={args.chunk} hidden={args.hidden} eval_every={args.eval_every}")
 
     cfg = FLConfig(topology=args.topology, num_nodes=args.nodes,
                    rounds=args.rounds, comm_batch=7)
     x, y, counts = synth_federation(args.nodes, args.windows, 12)
+    rng = np.random.default_rng(1)
+    val_x = rng.normal(size=(128, 12)).astype(np.float32)
+    val_y = rng.normal(size=(128,)).astype(np.float32)
 
-    def make(mixer):
+    def make(mixer, gossip_impl="allgather"):
         return GluADFL(LSTMModel(hidden=args.hidden).as_model(), sgd(1e-2),
-                       cfg, mixer=mixer)
+                       cfg, mixer=mixer, gossip_impl=gossip_impl)
+
+    cases = [
+        ("loop", "tree", "allgather", "loop", 0),
+        ("scan", "tree", "allgather", "scan", 0),
+        ("sharded-scan", "sharded", "allgather", "scan", 0),
+        ("sharded-psum-scan", "sharded", "psum", "scan", 0),
+    ]
+    if args.eval_every:
+        cases.insert(2, ("scan-eval", "tree", "allgather", "scan", args.eval_every))
 
     results = {}
-    for name, mixer, engine in (
-        ("loop", "tree", "loop"),
-        ("scan", "tree", "scan"),
-        ("sharded-scan", "sharded", "scan"),
-    ):
-        rps = bench_engine(make(mixer), x, y, counts, rounds=args.rounds,
+    for name, mixer, impl, engine, eval_every in cases:
+        rps = bench_engine(make(mixer, impl), x, y, counts, rounds=args.rounds,
                            batch_size=args.batch, chunk=args.chunk,
-                           engine=engine)
+                           engine=engine, eval_every=eval_every,
+                           val_data=(val_x, val_y))
         results[name] = rps
 
     out = {"config": vars(args), "devices": len(jax.devices()),
            "rounds_per_sec": results,
            "scan_speedup_vs_loop": results["scan"] / results["loop"]}
+    if "scan-eval" in results:
+        # streaming-eval overhead: 1.0 = free, acceptance target >= 0.9
+        out["scan_eval_relative_throughput"] = results["scan-eval"] / results["scan"]
     out_dir = Path(__file__).resolve().parents[1] / "experiments" / "paper"
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / "rounds_per_sec.json").write_text(json.dumps(out, indent=2))
 
     for name, rps in results.items():
         print(f"{name},{rps:.2f},{rps / results['loop']:.2f}x")
+    if "scan_eval_relative_throughput" in out:
+        print(f"scan-eval relative throughput: "
+              f"{out['scan_eval_relative_throughput']:.3f} (target >= 0.9)")
     return out
 
 

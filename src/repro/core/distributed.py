@@ -7,13 +7,25 @@ At fleet scale the federation axis N is sharded over the mesh's node axis
   * ring      — each node needs only neighbours i±1: TWO
                 ``jax.lax.ppermute`` (collective-permute) hops, cost
                 O(D) per link — the cheapest possible gossip;
-  * cluster / random / star / full — general row-stochastic mix: the node
-                axis is all-gathered and contracted locally (MXU matmul).
-                For node counts in this paper's range (<= 256 shards) a
-                single all-gather beats emulated point-to-point sends on
-                TPU ICI (dense collectives are what the fabric is good at).
+  * cluster / random / star / full — general row-stochastic mix, with two
+                interchangeable schedules behind ``impl=``:
+      - ``"allgather"``  the node axis is all-gathered and contracted
+                locally (MXU matmul).  For node counts in this paper's
+                range (<= 256 shards) a single all-gather beats emulated
+                point-to-point sends on TPU ICI (dense collectives are
+                what the fabric is good at) — but every device
+                materializes the full (N, D) federation, so per-device
+                memory does NOT shrink as the mesh grows;
+      - ``"psum"``       psum-of-local-contributions: each shard
+                contracts its LOCAL rows against its column block of the
+                mixing matrix and the partial products are summed with a
+                reduce-scatter (``jax.lax.psum_scatter``), which hands
+                each device only its own (N/shards, D) output rows.  No
+                device ever holds the gathered node axis, so per-device
+                working set scales O(N/shards · D) — the multi-host /
+                big-model schedule.
 
-Both paths are ``shard_map``s so the collective schedule is explicit and
+All paths are ``shard_map``s so the collective schedule is explicit and
 the dry-run can count its bytes.
 """
 from __future__ import annotations
@@ -28,6 +40,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.utils.compat import shard_map as _shard_map
 
 PyTree = Any
+
+# interchangeable schedules for the general (non-ring) sharded mix
+GOSSIP_IMPLS = ("allgather", "psum")
 
 
 def ring_gossip_shard(w, active, *, axis: str, n_shards: int, self_w: float = 1.0 / 3.0):
@@ -60,6 +75,22 @@ def general_gossip_shard(w, mix_rows, *, axis: str):
     return jnp.einsum("km,md->kd", mix_rows, w_all.astype(jnp.float32)).astype(w.dtype)
 
 
+def psum_gossip_shard(w, mix_cols, *, axis: str):
+    """shard_map body: memory-scaled general mix.  ``mix_cols`` is this
+    shard's (N, N/s) COLUMN block of the mixing matrix; ``w`` its local
+    (N/s, D) rows.  The shard's contribution to EVERY output row is one
+    local matmul, and the partial products are combined with a
+    reduce-scatter that leaves each shard holding only its own rows —
+    the node axis is never gathered on any device.
+
+    fp32 accumulation matches ``general_gossip_shard`` so the two impls
+    agree to float tolerance on the same mixing matrix.
+    """
+    contrib = jnp.einsum("nm,md->nd", mix_cols, w.astype(jnp.float32))
+    out = jax.lax.psum_scatter(contrib, axis, scatter_dimension=0, tiled=True)
+    return out.astype(w.dtype)
+
+
 _FED_MESH_CACHE: dict = {}
 
 
@@ -82,21 +113,31 @@ def sharded_gossip_mix(
     *,
     mesh: Mesh | None = None,
     node_axes: tuple[str, ...] | None = None,
+    impl: str = "allgather",
 ) -> PyTree:
     """Device-parallel gossip mix — drop-in peer of ``gossip_mix_tree`` /
     ``gossip_mix_kernel`` (same ``(stacked, mix[, active])`` signature).
 
     The federation axis N is sharded over the mesh's node axes: each
-    device holds N/devices rows of every leaf plus the matching rows of
-    the (N, N) mixing matrix, all-gathers the node axis once per leaf,
-    and contracts locally (``general_gossip_shard``).  With no ``mesh``
-    a cached 1-axis ``("node",)`` mesh over the largest device count
-    dividing N is used (``launch.mesh.make_federation_mesh``).
+    device holds N/devices rows of every leaf plus a block of the (N, N)
+    mixing matrix.  ``impl`` selects the collective schedule:
+
+      * ``"allgather"`` — gather the node axis once per leaf and contract
+        locally against this shard's mix ROWS (``general_gossip_shard``);
+        cheapest latency on ICI but per-device memory stays O(N · D);
+      * ``"psum"``      — contract local rows against this shard's mix
+        COLUMNS and reduce-scatter the partial products
+        (``psum_gossip_shard``); per-device memory O(N/shards · D).
+
+    With no ``mesh`` a cached 1-axis ``("node",)`` mesh over the largest
+    device count dividing N is used (``launch.mesh.make_federation_mesh``).
 
     Jit/scan friendly: mesh resolution happens at trace time, so the
     whole FL round — including this collective — compiles into one
     program (the trainer's ``mixer="sharded"`` path).
     """
+    if impl not in GOSSIP_IMPLS:
+        raise ValueError(f"impl {impl!r} not in {GOSSIP_IMPLS}")
     if mesh is None:
         mesh = _default_federation_mesh(mix.shape[0])
     axes = node_axes or tuple(a for a in mesh.axis_names if a != "model")
@@ -104,12 +145,20 @@ def sharded_gossip_mix(
 
     def leaf(l):
         flat = l.reshape(l.shape[0], -1)
-        out = _shard_map(
-            partial(general_gossip_shard, axis=axis),
-            mesh=mesh,
-            in_specs=(P(axes), P(axes)),
-            out_specs=P(axes),
-        )(flat, mix)
+        if impl == "psum":
+            out = _shard_map(
+                partial(psum_gossip_shard, axis=axis),
+                mesh=mesh,
+                in_specs=(P(axes), P(None, axes)),  # rows | COLUMN block
+                out_specs=P(axes),
+            )(flat, mix)
+        else:
+            out = _shard_map(
+                partial(general_gossip_shard, axis=axis),
+                mesh=mesh,
+                in_specs=(P(axes), P(axes)),
+                out_specs=P(axes),
+            )(flat, mix)
         if active is not None:
             # jnp.where, not arithmetic blending: inactive rows stay
             # bit-exact even if the gathered params carry NaN/Inf
@@ -120,11 +169,20 @@ def sharded_gossip_mix(
     return jax.tree.map(leaf, stacked_params)
 
 
-def make_sharded_gossip(mesh: Mesh, node_axes: tuple[str, ...], topology: str):
+def make_sharded_gossip(
+    mesh: Mesh,
+    node_axes: tuple[str, ...],
+    topology: str,
+    *,
+    gossip_impl: str = "allgather",
+):
     """Returns gossip_fn(stacked_tree, mix or active) running under ``mesh``.
 
     The stacked node axis is sharded over ``node_axes`` (e.g. ("data",) or
     ("pod", "data")).  Parameters' trailing dims stay as they were.
+    ``gossip_impl`` selects the general-topology collective schedule
+    (see :func:`sharded_gossip_mix`); the ring fast path ignores it
+    (two ppermutes are already O(D) per link).
     """
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
     n_shards = 1
@@ -149,6 +207,8 @@ def make_sharded_gossip(mesh: Mesh, node_axes: tuple[str, ...], topology: str):
         return gossip
 
     def gossip(stacked: PyTree, mix: jnp.ndarray) -> PyTree:
-        return sharded_gossip_mix(stacked, mix, mesh=mesh, node_axes=node_axes)
+        return sharded_gossip_mix(
+            stacked, mix, mesh=mesh, node_axes=node_axes, impl=gossip_impl
+        )
 
     return gossip

@@ -33,10 +33,17 @@ multi-round engine a compiler problem rather than a host loop:
     state is updated in place across the whole chunk — no per-round
     host dispatch, no per-round device<->host ``float(loss)`` sync, no
     re-entry through the jit cache.
-  * **Loop fallback** — the original per-round Python loop survives as
-    ``engine="loop"`` and is selected automatically when an
-    ``eval_fn``/``eval_every`` callback needs the host between rounds
-    (debugging, streaming eval).  Same numerics, one dispatch per round.
+  * **Streaming eval** — cheap metrics no longer force the host between
+    rounds: with ``eval_every > 0`` the scanned ``_round`` body carries a
+    ``jax.lax.cond``-guarded eval branch on ``round % eval_every`` that
+    computes val RMSE of the population model on a pre-batched
+    validation set (scan constants), and ``train_chunk`` returns the
+    stacked ``(chunk,)`` eval records next to the losses.  Rounds that
+    don't hit the boundary pay only the cond's predicate.
+  * **Loop fallback** — the original per-round Python loop survives ONLY
+    behind the explicit ``engine="loop"`` debug flag (host callbacks with
+    side effects, pdb between rounds).  Same numerics, one dispatch per
+    round; it is never selected automatically.
   * **Mixer modes** — the gossip contraction dispatches on ``mixer``:
       - ``"tree"``     reference einsum per leaf (CPU default),
       - ``"kernel"``   Pallas VMEM-blocked kernel (interpret on CPU); the
@@ -56,6 +63,7 @@ across a chunk.
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable
@@ -110,6 +118,7 @@ class GluADFL:
         grad_at: str = "premix",
         use_kernel: bool = False,
         mixer: str | None = None,
+        gossip_impl: str = "allgather",
         dp_noise_sigma: float = 0.0,
         loss_fn: Callable | None = None,
         mesh=None,
@@ -122,12 +131,17 @@ class GluADFL:
                 f"use_kernel=True contradicts mixer={mixer!r}; pass one or the other"
             )
         assert mixer in MIXERS, f"mixer {mixer!r} not in {MIXERS}"
+        from repro.core.distributed import GOSSIP_IMPLS
+
+        if gossip_impl not in GOSSIP_IMPLS:
+            raise ValueError(f"gossip_impl {gossip_impl!r} not in {GOSSIP_IMPLS}")
         self.model = model
         self.optimizer = optimizer
         self.cfg = cfg
         self.grad_at = grad_at
         self.mixer = mixer
         self.use_kernel = mixer == "kernel"  # kept for back-compat introspection
+        self.gossip_impl = gossip_impl       # sharded-mixer collective schedule
         self.mesh = mesh                     # optional explicit mesh for "sharded"
         # BEYOND-PAPER: local differential privacy on the broadcast —
         # Gaussian noise is added to the parameters a node SHARES (its
@@ -138,12 +152,17 @@ class GluADFL:
         self.loss_fn = loss_fn or (
             lambda p, x, y: jnp.mean(jnp.square(model.apply(p, x) - y))
         )
-        self._round_jit = jax.jit(self._round, static_argnames=("batch_size",))
+        self._round_jit = jax.jit(
+            self._round, static_argnames=("batch_size", "eval_every", "eval_fn")
+        )
         self._chunk_jit = jax.jit(
             self._train_chunk,
-            static_argnames=("batch_size", "chunk"),
+            static_argnames=("batch_size", "chunk", "eval_every", "eval_fn"),
             donate_argnums=(0,),
         )
+        # canonical eval fns are jit-static: keep them identity-stable so
+        # repeated train() calls hit the compile cache
+        self._eval_wrappers: dict[int, Callable] = {}
 
     # ------------------------------------------------------------------
     def init(self, key, example_x) -> FLState:
@@ -190,7 +209,9 @@ class GluADFL:
         if self.mixer == "kernel":
             return gossip_mix_kernel(stacked, mix)
         if self.mixer == "sharded":
-            return sharded_gossip_mix(stacked, mix, mesh=self.mesh)
+            return sharded_gossip_mix(
+                stacked, mix, mesh=self.mesh, impl=self.gossip_impl
+            )
         return gossip_mix_tree(stacked, mix)
 
     def _gossip(self, premix: PyTree, mix: jnp.ndarray, active, k_dp) -> PyTree:
@@ -216,9 +237,89 @@ class GluADFL:
         )
 
     # ------------------------------------------------------------------
-    def _round(self, state: FLState, x, y, counts, *, batch_size: int):
-        """One FL round as a pure ``FLState -> (FLState, loss)`` body —
-        directly scannable (train_chunk) and jit-able (loop engine)."""
+    def _default_eval_metrics(self, pop_params, val_x, val_y):
+        """Built-in streaming-eval metric: val RMSE of the population
+        model on the pre-batched validation set (scan constants)."""
+        pred = self.model.apply(pop_params, val_x)
+        return {"val_rmse": jnp.sqrt(jnp.mean(jnp.square(pred - val_y)))}
+
+    def _resolve_eval_fn(self, eval_fn: Callable | None) -> Callable:
+        """Normalize to the canonical ``f(pop_params, val_x, val_y) ->
+        dict`` signature.  ``None`` -> built-in val-RMSE; a legacy 1-arg
+        ``f(pop_params)`` is wrapped (wrapper cached per fn so the jit
+        static-arg cache keeps hitting)."""
+        if eval_fn is None:
+            return self._default_eval_metrics
+        try:
+            n_params = len(inspect.signature(eval_fn).parameters)
+        except (TypeError, ValueError):
+            n_params = 3
+        if n_params != 1:
+            return eval_fn
+        key = id(eval_fn)
+        if key not in self._eval_wrappers:
+            # bounded: each cached wrapper pins its eval_fn (which also
+            # keeps the id stable) and is a distinct jit static arg, so a
+            # long-lived sweep over fresh lambdas must not grow forever
+            if len(self._eval_wrappers) >= 64:
+                self._eval_wrappers.clear()
+            self._eval_wrappers[key] = lambda pop, vx, vy: eval_fn(pop)
+        return self._eval_wrappers[key]
+
+    def _eval_metrics(self, params, new_round, val_x, val_y, eval_every, eval_fn):
+        """The cond-guarded in-scan eval branch: at ``new_round %
+        eval_every == 0`` boundaries compute ``eval_fn(population, val_x,
+        val_y)``; off-boundary rounds return the same dict filled with
+        NaN (the host-side sentinel) and pay only the predicate — the
+        population average itself lives INSIDE the true branch, so
+        off-boundary rounds skip the O(N·D) reduction too."""
+
+        def run_eval(op):
+            p, vx, vy = op
+            return eval_fn(tree_mean(p), vx, vy)
+
+        operand = (params, val_x, val_y)
+        shapes = jax.eval_shape(run_eval, operand)
+        if not isinstance(shapes, dict):
+            raise TypeError(
+                f"streaming eval_fn must return a dict of float scalars, "
+                f"got {type(shapes).__name__}"
+            )
+        for k, s in shapes.items():
+            if not (jnp.issubdtype(s.dtype, jnp.floating) and s.shape == ()):
+                raise TypeError(
+                    f"streaming eval_fn output {k!r} must be a floating "
+                    f"SCALAR (NaN is the off-boundary sentinel and the "
+                    f"history records floats), got {s.dtype}{s.shape}"
+                )
+        return jax.lax.cond(
+            new_round % eval_every == 0,
+            run_eval,
+            lambda op: jax.tree.map(
+                lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes
+            ),
+            operand,
+        )
+
+    # ------------------------------------------------------------------
+    def _round(
+        self,
+        state: FLState,
+        x,
+        y,
+        counts,
+        val_x=None,
+        val_y=None,
+        *,
+        batch_size: int,
+        eval_every: int = 0,
+        eval_fn: Callable | None = None,
+    ):
+        """One FL round as a pure ``FLState -> (FLState, aux)`` body —
+        directly scannable (train_chunk) and jit-able (loop engine).
+        ``aux`` is the scalar loss, or ``(loss, metrics_dict)`` when the
+        streaming-eval branch is armed (``eval_every > 0`` with an
+        ``eval_fn``)."""
         cfg = self.cfg
         n = cfg.num_nodes
         key, k_act, k_top, k_batch = jax.random.split(state.key, 4)
@@ -254,36 +355,81 @@ class GluADFL:
             state.opt_state,
         )
         loss = jnp.sum(losses * active) / jnp.maximum(jnp.sum(active), 1.0)
+        new_round = state.round + 1
+        aux = loss
+        if eval_every and eval_fn is not None:
+            metrics = self._eval_metrics(
+                params, new_round, val_x, val_y, eval_every, eval_fn
+            )
+            aux = (loss, metrics)
         return (
             FLState(
                 params=params,
                 opt_state=opt_state,
                 staleness=staleness_update(state.staleness, active),
-                round=state.round + 1,
+                round=new_round,
                 key=key,
             ),
-            loss,
+            aux,
         )
 
     # ------------------------------------------------------------------
-    def _train_chunk(self, state: FLState, x, y, counts, *, batch_size: int, chunk: int):
+    def _train_chunk(
+        self,
+        state: FLState,
+        x,
+        y,
+        counts,
+        val_x=None,
+        val_y=None,
+        *,
+        batch_size: int,
+        chunk: int,
+        eval_every: int = 0,
+        eval_fn: Callable | None = None,
+    ):
         def body(st, _):
-            return self._round(st, x, y, counts, batch_size=batch_size)
+            return self._round(
+                st, x, y, counts, val_x, val_y,
+                batch_size=batch_size, eval_every=eval_every, eval_fn=eval_fn,
+            )
 
         return jax.lax.scan(body, state, None, length=chunk)
 
     def train_chunk(
-        self, state: FLState, x, y, counts, *, batch_size: int = 64, chunk: int = DEFAULT_CHUNK
-    ) -> tuple[FLState, jnp.ndarray]:
+        self,
+        state: FLState,
+        x,
+        y,
+        counts,
+        *,
+        batch_size: int = 64,
+        chunk: int = DEFAULT_CHUNK,
+        val_x=None,
+        val_y=None,
+        eval_every: int = 0,
+        eval_fn: Callable | None = None,
+    ) -> tuple[FLState, Any]:
         """Run ``chunk`` rounds as one compiled ``lax.scan`` program.
 
         Returns ``(new_state, losses)`` with ``losses.shape == (chunk,)``
         (per-round mean active loss, still on device — the caller decides
-        when to sync).  The input ``state``'s buffers are DONATED: do not
-        reuse it after the call.  Recompiles once per distinct
-        ``(batch_size, chunk)`` pair.
+        when to sync).  With the streaming-eval branch armed
+        (``eval_every > 0`` and an ``eval_fn``), returns
+        ``(new_state, (losses, metrics))`` where ``metrics`` is a dict of
+        ``(chunk,)`` arrays that hold the eval values at
+        ``round % eval_every == 0`` boundaries and NaN elsewhere —
+        eval never leaves the compiled program.  ``eval_fn`` must be the
+        canonical traceable ``f(pop_params, val_x, val_y) -> dict``
+        (see :meth:`_resolve_eval_fn`).  The input ``state``'s buffers
+        are DONATED: do not reuse it after the call.  Recompiles once per
+        distinct ``(batch_size, chunk, eval_every, eval_fn)`` tuple.
         """
-        return self._chunk_jit(state, x, y, counts, batch_size=batch_size, chunk=chunk)
+        return self._chunk_jit(
+            state, x, y, counts, val_x, val_y,
+            batch_size=batch_size, chunk=chunk,
+            eval_every=eval_every, eval_fn=eval_fn,
+        )
 
     # ------------------------------------------------------------------
     def train(
@@ -296,37 +442,81 @@ class GluADFL:
         batch_size: int = 64,
         rounds: int | None = None,
         eval_every: int = 0,
-        eval_fn: Callable[[PyTree], dict] | None = None,
+        eval_fn: Callable | None = None,
+        val_data: tuple | None = None,
         chunk: int | None = None,
         engine: str = "scan",
     ):
         """Run T rounds; returns (population_params, history, state).
 
-        ``engine="scan"`` (default) runs chunked ``train_chunk`` programs
-        and syncs losses once per chunk; ``engine="loop"`` is the
-        per-round Python-loop fallback, selected automatically when an
-        ``eval_every``/``eval_fn`` callback needs the host between
-        rounds.  History is identical either way: one record per round.
+        Engine selection:
+
+        * ``engine="scan"`` (default — the one production path): chunked
+          ``train_chunk`` programs, one host sync per chunk, WITH OR
+          WITHOUT eval.  ``eval_every > 0`` arms the in-scan streaming
+          eval branch: ``eval_fn`` must be pure/traceable —
+          ``f(pop_params, val_x, val_y) -> dict`` of float scalars (a
+          legacy 1-arg ``f(pop_params)`` is auto-wrapped); with
+          ``eval_fn=None`` and ``val_data=(val_x, val_y)`` the built-in
+          population val-RMSE is used.  Eval values surface in the
+          history at each boundary, same as the loop engine's records.
+        * ``engine="loop"`` — explicit DEBUG fallback only (never
+          selected automatically): per-round Python loop, one jit
+          dispatch + host sync per round; ``eval_fn`` may be an
+          arbitrary host callback (side effects, non-traceable code).
+
+        History is identical either way: one record per round, eval keys
+        merged into the boundary rounds' records.
         """
         assert engine in ("scan", "loop"), engine
         rounds = rounds if rounds is not None else self.cfg.rounds
         x, y = jnp.asarray(x), jnp.asarray(y)
         counts = jnp.asarray(counts)
+        val_x = val_y = None
+        if val_data is not None:
+            val_x, val_y = (jnp.asarray(v) for v in val_data)
+        do_eval = bool(eval_every) and (eval_fn is not None or val_data is not None)
         state = self.init(key, x[0, :1])
         history: list[dict] = []
 
-        if engine == "loop" or (eval_every and eval_fn is not None):
+        if engine == "loop":
+            resolved = self._resolve_eval_fn(eval_fn) if do_eval else None
             for t in range(rounds):
                 state, loss = self._round_jit(state, x, y, counts, batch_size=batch_size)
                 rec = {"round": t, "loss": float(loss)}
-                if eval_every and eval_fn and (t + 1) % eval_every == 0:
-                    rec.update(eval_fn(self.population(state)))
+                if do_eval and (t + 1) % eval_every == 0:
+                    out = resolved(self.population(state), val_x, val_y)
+                    rec.update(
+                        {k: (float(v) if hasattr(v, "item") else v)
+                         for k, v in out.items()}
+                    )
                 history.append(rec)
             return self.population(state), history, state
 
         chunk = max(1, min(chunk or DEFAULT_CHUNK, rounds))
         full, rem = divmod(rounds, chunk)
         t = 0
+        if do_eval:
+            resolved = self._resolve_eval_fn(eval_fn)
+            # the tail also runs as a (shorter) scan so eval stays inside
+            # the compiled program for every round
+            for c in [chunk] * full + ([rem] if rem else []):
+                state, (losses, metrics) = self.train_chunk(
+                    state, x, y, counts, batch_size=batch_size, chunk=c,
+                    val_x=val_x, val_y=val_y,
+                    eval_every=eval_every, eval_fn=resolved,
+                )
+                # ONE host sync per chunk, eval records included
+                losses = np.asarray(losses)
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                for i in range(c):
+                    rec = {"round": t + i, "loss": float(losses[i])}
+                    if (t + i + 1) % eval_every == 0:
+                        rec.update({k: float(v[i]) for k, v in metrics.items()})
+                    history.append(rec)
+                t += c
+            return self.population(state), history, state
+
         for _ in range(full):
             state, losses = self.train_chunk(
                 state, x, y, counts, batch_size=batch_size, chunk=chunk

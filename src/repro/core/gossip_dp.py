@@ -47,16 +47,33 @@ def gossip_mix_params(
     mix: jnp.ndarray,
     mesh: Mesh,
     node_axes: tuple[str, ...],
+    *,
+    impl: str = "allgather",
 ):
     """Mix REPLICATED-over-node-axes parameters by M via psum weighting.
 
-    In gossip-DP each node holds the FULL parameters (possibly
-    tensor-sharded on "model"), replicated across the node axes.  The mix
-    for node n is sum_m M[n,m] w_m: with w replicated, this is a weighted
-    psum over the node axes where each participant contributes its own
-    row weight — one all-reduce-sized collective, the BASELINE schedule.
+    In gossip-DP each node holds the FULL parameters, fully replicated
+    over the mesh (leaves enter and leave as ``P()``) — tensor-parallel
+    ("model"-sharded) parameters must go through :func:`ring_mix_params`
+    with explicit ``specs`` instead.  The mix
+    for node n is sum_m M[n,m] w_m: with w replicated, each participant
+    contributes its own column-weighted copy and the contributions are
+    summed over the node axes.  ``impl`` picks the collective:
+
+      * ``"allgather"`` — BASELINE schedule: full ``psum`` of the
+        (N, ...) stacked contributions, then each node slices its own
+        row.  Every device holds an N-times-parameters temp (the same
+        memory cliff as an all-gather, hence the shared knob name).
+      * ``"psum"``      — memory-scaled: ``psum_scatter`` hands each
+        node ONLY its own mixed row, so the temp never exceeds one
+        parameter copy per device beyond the local shard.
+
     (The ring fast path in ``ring_mix_params`` cuts this to 2 permutes.)
     """
+    from repro.core.distributed import GOSSIP_IMPLS
+
+    if impl not in GOSSIP_IMPLS:
+        raise ValueError(f"impl {impl!r} not in {GOSSIP_IMPLS}")
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
 
     def leaf(w):
@@ -68,14 +85,23 @@ def gossip_mix_params(
                 :, idx
             ]
             contrib = w_local[None, ...] * col.reshape((-1,) + (1,) * w_local.ndim)
+            if impl == "psum":
+                # reduce-scatter along the stacked node dim: with one node
+                # per shard group the (1, ...) result IS this node's row
+                out = jax.lax.psum_scatter(
+                    contrib, axis, scatter_dimension=0, tiled=True
+                )
+                return out[0]
             summed = jax.lax.psum(contrib, axis)  # (N, ...) mixed for all nodes
             return summed[idx]
 
+        # node-replicated leaves: P() on both sides (tensor-parallel
+        # sharding goes through ring_mix_params' explicit `specs`)
         return _shard_map(
             body,
             mesh=mesh,
-            in_specs=(P(*_param_spec(w, mesh)), P()),
-            out_specs=P(*_param_spec(w, mesh)),
+            in_specs=(P(), P()),
+            out_specs=P(),
             check_vma=False,
         )(w, mix)
 

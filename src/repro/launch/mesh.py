@@ -35,6 +35,37 @@ def make_federation_mesh(num_nodes: int, *, devices: int | None = None):
     return jax.make_mesh((width,), ("node",))
 
 
+# per-device budget for the gathered (N, D) federation before the
+# allgather mixer's memory cliff outweighs its ICI-friendly schedule;
+# ~1 GiB leaves headroom for the model step on current HBM/host parts
+DEFAULT_GATHER_BUDGET_BYTES = 1 << 30
+
+
+def choose_gossip_impl(
+    num_nodes: int,
+    param_bytes_per_node: int,
+    *,
+    shards: int | None = None,
+    budget_bytes: int = DEFAULT_GATHER_BUDGET_BYTES,
+) -> str:
+    """Memory-scaled gossip-impl selection (``--gossip-impl auto``).
+
+    The ``"allgather"`` mixer materializes the full federation —
+    ``num_nodes * param_bytes_per_node`` — on EVERY device, regardless of
+    how many shards the mesh has; ``"psum"`` keeps the per-device working
+    set at O(N/shards · D) via reduce-scatter.  Below ``budget_bytes``
+    the gathered form wins (one dense collective, what the ICI fabric is
+    best at); above it, psum is the only schedule that fits.  ``shards``
+    defaults to the federation mesh width for ``num_nodes``.
+    """
+    if shards is None:
+        shards = make_federation_mesh(num_nodes).shape["node"]
+    if shards <= 1:
+        return "allgather"  # single shard: gather is a no-op copy
+    gathered = num_nodes * param_bytes_per_node
+    return "allgather" if gathered <= budget_bytes else "psum"
+
+
 def make_gossip_dp_mesh(*, nodes: int = 4, multi_pod: bool = False):
     """Mesh view for gossip data-parallelism (DESIGN.md §4): the data
     axis is split into (node, data) so each federated node is a

@@ -2,11 +2,42 @@
 
     PYTHONPATH=src python -m repro.launch.train \
         --dataset ohiot1dm --topology random --rounds 200 \
-        [--arch glucose-lstm] [fl.comm_batch=7 train.lr=1e-3 ...]
+        [--eval-every 8] [--mixer sharded --gossip-impl psum] \
+        [fl.comm_batch=7 train.lr=1e-3 ...]
 
 Loads the synthetic-twin dataset, runs GluADFL, reports clinical metrics
 of the population model per patient + aggregate, and writes a checkpoint
 (.npz of the population params).
+
+Engine selection
+----------------
+The compiled ``lax.scan`` chunk engine is the ONE production path — it
+runs every configuration, including streaming eval:
+
+  * default              — scan engine, ``--chunk`` rounds per compiled
+                           program (one host sync per chunk);
+  * ``--eval-every K``   — STAYS on the scan engine: val RMSE of the
+                           population model is computed INSIDE the
+                           scanned round body (lax.cond on
+                           ``round % K``) against a pre-batched
+                           validation set, so eval costs no per-round
+                           host sync.  Records land in the history at
+                           each boundary;
+  * ``--engine loop`` or ``--chunk 0``
+                         — explicit per-round Python-loop DEBUG
+                           fallback (host callback eval, pdb between
+                           rounds).  Never selected automatically.
+
+Gossip impl (``--mixer sharded`` only)
+--------------------------------------
+  * ``--gossip-impl allgather`` (default) — gather the federation's node
+    axis per device and contract locally: fastest on ICI while the
+    gathered (N, D) block fits per-device memory;
+  * ``--gossip-impl psum``      — psum-of-local-contributions
+    (reduce-scatter): per-device memory O(N/shards · D), the multi-host
+    / big-model schedule;
+  * ``--gossip-impl auto``      — pick by the per-device memory the
+    gathered federation would need (``launch.mesh.choose_gossip_impl``).
 """
 from __future__ import annotations
 
@@ -60,6 +91,20 @@ def main():
                     help="rounds per compiled lax.scan chunk (host syncs "
                          "once per chunk); 0 = per-round python loop; "
                          "default: gluadfl.DEFAULT_CHUNK")
+    ap.add_argument("--engine", default="scan", choices=["scan", "loop"],
+                    help="scan (default; the production path, incl. "
+                         "streaming eval) or loop (per-round debug "
+                         "fallback; also selected by --chunk 0)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="compute population val-RMSE every K rounds "
+                         "INSIDE the scanned chunk (0 = off); no "
+                         "per-round host sync")
+    ap.add_argument("--gossip-impl", default="allgather",
+                    choices=["allgather", "psum", "auto"],
+                    help="sharded-mixer collective schedule: allgather "
+                         "(per-device O(N*D) gather), psum "
+                         "(reduce-scatter, per-device O(N/shards*D)), "
+                         "or auto (memory-based choice)")
     ap.add_argument("--out", default="experiments/checkpoints")
     ap.add_argument("overrides", nargs="*", help="cfg overrides a.b=c")
     args = ap.parse_args()
@@ -78,16 +123,44 @@ def main():
         cfg.fl, topology=args.topology, num_nodes=fed.num_nodes,
         rounds=args.rounds, inactive_ratio=args.inactive_ratio,
     )
+    gossip_impl = args.gossip_impl
+    if gossip_impl == "auto":
+        from repro.launch.mesh import choose_gossip_impl
+
+        p0 = model.init(jax.random.PRNGKey(0))
+        node_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(p0))
+        gossip_impl = choose_gossip_impl(fed.num_nodes, node_bytes)
+        print(f"gossip-impl auto -> {gossip_impl}")
+
     trainer = GluADFL(model, get_optimizer(cfg.train.optimizer, cfg.train.lr),
-                      fl_cfg, use_kernel=args.use_kernel, mixer=args.mixer)
+                      fl_cfg, use_kernel=args.use_kernel, mixer=args.mixer,
+                      gossip_impl=gossip_impl)
+
+    # pre-batched validation set for the in-scan streaming eval: a capped
+    # slice of every patient's val windows (one fixed array -> scan const)
+    val_data = None
+    if args.eval_every:
+        cap = max(1, 2048 // fed.num_nodes)
+        val_x = np.concatenate([p.val_x[:cap] for p in fed.patients])
+        val_y = np.concatenate([p.val_y[:cap] for p in fed.patients])
+        val_data = (val_x, val_y)
+        print(f"streaming eval: every {args.eval_every} rounds on "
+              f"{len(val_x)} val windows (in-scan)")
+
     pop, hist, state = trainer.train(
         jax.random.PRNGKey(cfg.fl.seed), fed.x, fed.y, fed.counts,
         batch_size=cfg.train.batch_size,
-        engine="loop" if args.chunk == 0 else "scan",
+        engine="loop" if args.chunk == 0 else args.engine,
         chunk=args.chunk or None,
+        eval_every=args.eval_every,
+        val_data=val_data,
     )
     print(f"round 0 loss {hist[0]['loss']:.4f} -> round {args.rounds-1} "
           f"loss {hist[-1]['loss']:.4f}")
+    evals = [h for h in hist if "val_rmse" in h]
+    if evals:
+        print("val RMSE (normalized): " + "  ".join(
+            f"r{h['round']}={h['val_rmse']:.4f}" for h in evals[-5:]))
 
     # per-patient + aggregate clinical metrics
     preds, ys = [], []

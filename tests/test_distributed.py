@@ -1,7 +1,9 @@
 """Sharded-gossip + gossip-DP + small-mesh dry-run integration tests.
 
 These spawn subprocesses with XLA_FLAGS for multi-device CPU (the main
-test process must keep the default single device)."""
+test process must keep the default single device).  The ``multidevice``
+marker routes them to CI's forced-8-device job (`pytest -m
+multidevice`); a plain local `pytest` run still executes everything."""
 import json
 import os
 import subprocess
@@ -25,6 +27,7 @@ def _run(src: str, devices: int = 8) -> str:
     return out.stdout
 
 
+@pytest.mark.multidevice
 def test_sharded_ring_gossip_matches_reference():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
@@ -44,6 +47,7 @@ def test_sharded_ring_gossip_matches_reference():
     """))
 
 
+@pytest.mark.multidevice
 def test_sharded_general_gossip_matches_reference():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
@@ -62,6 +66,7 @@ def test_sharded_general_gossip_matches_reference():
     """))
 
 
+@pytest.mark.multidevice
 def test_sharded_ring_gossip_respects_inactive():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
@@ -77,6 +82,7 @@ def test_sharded_ring_gossip_respects_inactive():
     """))
 
 
+@pytest.mark.multidevice
 def test_mixer_parity_tree_kernel_sharded():
     """The three interchangeable gossip mixers agree on random
     row-stochastic matrices with inactive nodes (the sharded one under a
@@ -106,6 +112,7 @@ def test_mixer_parity_tree_kernel_sharded():
     """))
 
 
+@pytest.mark.multidevice
 def test_sharded_mixer_trains_like_tree_mixer():
     """GluADFL end-to-end with mixer="sharded" (scan engine, N nodes over
     8 devices) matches the tree mixer's population model."""
@@ -141,6 +148,7 @@ def test_sharded_mixer_trains_like_tree_mixer():
     """))
 
 
+@pytest.mark.multidevice
 def test_mini_dryrun_dense_and_moe():
     """End-to-end mini dry-run: reduced archs on an 8-device (4,2) mesh,
     lower + compile + cost analysis — the same path as the 512-device
@@ -191,6 +199,108 @@ def test_gossip_dp_schedule():
     assert not np.allclose(np.asarray(m1), np.asarray(m2))  # time-varying
 
 
+@pytest.mark.multidevice
+def test_psum_gossip_matches_allgather_and_reference():
+    """gossip_impl="psum" (reduce-scatter of local contributions) matches
+    the allgather impl AND the single-device reference numerically on 8
+    forced CPU devices, with bit-exact inactive rows."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.gossip import gossip_mix_tree, sharded_gossip_mix
+        from repro.core.topology import mixing_matrix, random_adjacency
+        N, D = 8, 96
+        k = jax.random.split(jax.random.PRNGKey(0), 4)
+        w = {"a": jax.random.normal(k[0], (N, D)),
+             "b": jax.random.normal(k[1], (N, 3, 7))}
+        active = (jax.random.uniform(k[2], (N,)) > 0.4).astype(jnp.float32)
+        mix = mixing_matrix(random_adjacency(jax.random.PRNGKey(7), N, 3), active, 3)
+        ref = gossip_mix_tree(w, mix)
+        ag = jax.jit(lambda ww, mm, aa: sharded_gossip_mix(ww, mm, aa, impl="allgather"))(w, mix, active)
+        ps = jax.jit(lambda ww, mm, aa: sharded_gossip_mix(ww, mm, aa, impl="psum"))(w, mix, active)
+        for kk in w:
+            np.testing.assert_allclose(np.asarray(ref[kk]), np.asarray(ag[kk]), atol=1e-5)
+            np.testing.assert_allclose(np.asarray(ref[kk]), np.asarray(ps[kk]), atol=1e-5)
+            np.testing.assert_allclose(np.asarray(ag[kk]), np.asarray(ps[kk]), atol=1e-5)
+            idx = np.where(np.asarray(active) == 0)[0]
+            np.testing.assert_array_equal(np.asarray(ps[kk])[idx], np.asarray(w[kk])[idx])
+        print("PSUM_PARITY_OK")
+    """))
+
+
+@pytest.mark.multidevice
+def test_psum_impl_trains_like_allgather_impl():
+    """GluADFL end-to-end: mixer="sharded" with gossip_impl="psum" (scan
+    engine + in-scan streaming eval) matches the allgather impl's
+    population model, losses, and eval records."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config import FLConfig
+        from repro.core import GluADFL
+        from repro.models import LSTMModel
+        from repro.optim import sgd
+        from repro.utils.pytree import tree_l2_norm, tree_sub
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(8, 40, 12)).astype(np.float32)
+        y = (x @ rng.normal(size=(12,)).astype(np.float32)).astype(np.float32)
+        counts = np.full((8,), 40, np.int32)
+        vx = rng.normal(size=(16, 12)).astype(np.float32)
+        vy = rng.normal(size=(16,)).astype(np.float32)
+        cfg = FLConfig(topology="random", num_nodes=8, rounds=6,
+                       comm_batch=3, inactive_ratio=0.25)
+        def train(impl):
+            tr = GluADFL(LSTMModel(hidden=8).as_model(), sgd(1e-2), cfg,
+                         mixer="sharded", gossip_impl=impl)
+            return tr.train(jax.random.PRNGKey(0), x, y, counts, batch_size=8,
+                            eval_every=3, val_data=(vx, vy), chunk=6)
+        p_ag, h_ag, _ = train("allgather")
+        p_ps, h_ps, _ = train("psum")
+        assert len(h_ag) == len(h_ps) == 6
+        assert float(tree_l2_norm(tree_sub(p_ag, p_ps))) < 1e-4
+        for a, b in zip(h_ag, h_ps):
+            assert abs(a["loss"] - b["loss"]) < 1e-4, (a, b)
+            assert ("val_rmse" in a) == ("val_rmse" in b)
+            if "val_rmse" in a:
+                assert abs(a["val_rmse"] - b["val_rmse"]) < 1e-4, (a, b)
+        assert sum("val_rmse" in h for h in h_ag) == 2
+        print("PSUM_TRAIN_OK")
+    """))
+
+
+@pytest.mark.multidevice
+def test_gossip_dp_psum_scatter_matches_full_psum():
+    """gossip_mix_params impl="psum" (psum_scatter, memory-scaled) agrees
+    with the impl="allgather" baseline (full psum + slice) for
+    node-replicated params on a (node, model) mesh."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.gossip_dp import gossip_mix_params
+        from repro.core.topology import mixing_matrix, random_adjacency
+        mesh = jax.make_mesh((4, 2), ("node", "model"))
+        k = jax.random.split(jax.random.PRNGKey(0), 2)
+        params = {"w": jax.random.normal(k[0], (4, 8, 6)), "b": jnp.zeros((3,))}
+        mix = mixing_matrix(random_adjacency(jax.random.PRNGKey(3), 4, 2),
+                            jnp.ones((4,)), 2)
+        pa = jax.jit(lambda p: gossip_mix_params(p, mix, mesh, ("node",), impl="allgather"))(params)
+        pb = jax.jit(lambda p: gossip_mix_params(p, mix, mesh, ("node",), impl="psum"))(params)
+        for kk in params:
+            np.testing.assert_allclose(np.asarray(pa[kk]), np.asarray(pb[kk]), atol=1e-5)
+        print("GOSSIP_DP_PSUM_OK")
+    """))
+
+
+def test_bad_gossip_impl_rejected():
+    """Unknown gossip_impl must raise at construction, not at trace."""
+    from repro.config import FLConfig
+    from repro.core import GluADFL
+    from repro.models import LSTMModel
+    from repro.optim import sgd
+
+    with pytest.raises(ValueError, match="gossip_impl"):
+        GluADFL(LSTMModel(hidden=8).as_model(), sgd(1e-2),
+                FLConfig(num_nodes=4, rounds=1), gossip_impl="ringz")
+
+
+@pytest.mark.multidevice
 def test_gossip_dp_ring_mix_on_mesh():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np

@@ -105,3 +105,20 @@ def test_gossip_dp_ring_specs_roundtrip():
     out = ring_mix_params(params, mesh, ("node",), specs=specs)
     # single node: mix = (w + w + w)/3 = w
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(params["w"]), atol=1e-6)
+
+
+def test_choose_gossip_impl_memory_heuristic():
+    """--gossip-impl auto: allgather while the gathered (N, D) federation
+    fits the per-device budget, psum above it; single-shard meshes always
+    allgather (the gather is a no-op copy)."""
+    from repro.launch.mesh import choose_gossip_impl
+
+    # 32 nodes x 1 KiB fits any sane budget
+    assert choose_gossip_impl(32, 1024, shards=8) == "allgather"
+    # 256 nodes x 64 MiB = 16 GiB gathered per device -> memory-scaled
+    assert choose_gossip_impl(256, 64 << 20, shards=8) == "psum"
+    # explicit budget boundary is inclusive
+    assert choose_gossip_impl(4, 100, shards=4, budget_bytes=400) == "allgather"
+    assert choose_gossip_impl(4, 101, shards=4, budget_bytes=400) == "psum"
+    # one shard: nothing to scale
+    assert choose_gossip_impl(7, 1 << 40, shards=1) == "allgather"

@@ -1,0 +1,160 @@
+"""Streaming-eval parity: the in-scan lax.cond eval branch must produce
+records identical to the loop engine's host callback on the same key
+stream — including with DP noise and inactive masks — and the scan
+engine must be the one true path (no per-round host dispatch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import GluADFL
+from repro.models import LSTMModel
+from repro.optim import adam, sgd
+
+
+def _toy_fed(n=6, m=40, L=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, m, L)).astype(np.float32)
+    w_true = rng.normal(size=(L,)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(size=(n, m)).astype(np.float32)
+    counts = np.full((n,), m, np.int32)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
+
+
+def _val_set(m=24, L=12, seed=7):
+    rng = np.random.default_rng(seed)
+    vx = rng.normal(size=(m, L)).astype(np.float32)
+    vy = (vx @ rng.normal(size=(L,)).astype(np.float32)).astype(np.float32)
+    return jnp.asarray(vx), jnp.asarray(vy)
+
+
+@pytest.mark.parametrize("dp_sigma,inactive", [(0.0, 0.0), (0.05, 0.4)])
+def test_scan_eval_records_bitwise_match_loop(dp_sigma, inactive):
+    """Scan-engine eval records (losses + val RMSE at every eval_every
+    boundary) bitwise-match the loop-engine callback on the same key
+    stream, including with DP noise and inactive masks."""
+    rounds, eval_every = 9, 2
+    x, y, counts = _toy_fed()
+    val = _val_set()
+    cfg = FLConfig(topology="random", num_nodes=6, rounds=rounds,
+                   comm_batch=3, inactive_ratio=inactive)
+    tr = GluADFL(LSTMModel(hidden=8).as_model(), sgd(1e-2), cfg,
+                 dp_noise_sigma=dp_sigma)
+    pop_s, hist_s, st_s = tr.train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8,
+        eval_every=eval_every, val_data=val, chunk=4,
+    )
+    pop_l, hist_l, st_l = tr.train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8,
+        eval_every=eval_every, val_data=val, engine="loop",
+    )
+    assert len(hist_s) == len(hist_l) == rounds
+    for hs, hl in zip(hist_s, hist_l):
+        assert set(hs) == set(hl), (hs, hl)
+        assert hs["loss"] == hl["loss"]  # bitwise: same program numerics
+        if (hs["round"] + 1) % eval_every == 0:
+            assert "val_rmse" in hs
+            assert hs["val_rmse"] == hl["val_rmse"]
+            assert np.isfinite(hs["val_rmse"])
+        else:
+            assert "val_rmse" not in hs
+    np.testing.assert_array_equal(np.asarray(st_s.key), np.asarray(st_l.key))
+
+
+def test_eval_runs_through_scan_not_per_round_dispatch():
+    """train(eval_every=...) must go through train_chunk with NO
+    per-round host dispatch: stub out the per-round jit and the run must
+    still succeed (the loop engine would crash)."""
+    x, y, counts = _toy_fed()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=7)
+    tr = GluADFL(LSTMModel(hidden=8).as_model(), sgd(1e-2), cfg)
+
+    def boom(*a, **kw):
+        raise AssertionError("per-round dispatch used by the scan engine")
+
+    tr._round_jit = boom
+    pop, hist, st = tr.train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8,
+        eval_every=2, val_data=_val_set(), chunk=3,  # 2 full chunks + tail
+    )
+    assert [h["round"] for h in hist] == list(range(7))
+    assert [h["round"] for h in hist if "val_rmse" in h] == [1, 3, 5]
+    assert int(st.round) == 7
+
+
+def test_train_chunk_eval_records_nan_off_boundary():
+    """train_chunk returns (losses, metrics) with the eval value at
+    boundaries and the NaN sentinel elsewhere — eval never leaves the
+    compiled program."""
+    k, eval_every = 6, 3
+    x, y, counts = _toy_fed()
+    vx, vy = _val_set()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=k)
+    tr = GluADFL(LSTMModel(hidden=8).as_model(), adam(5e-3), cfg)
+    s0 = tr.init(jax.random.PRNGKey(0), x[0, :1])
+    s1, (losses, metrics) = tr.train_chunk(
+        s0, x, y, counts, batch_size=8, chunk=k,
+        val_x=vx, val_y=vy, eval_every=eval_every,
+        eval_fn=tr._resolve_eval_fn(None),
+    )
+    assert losses.shape == (k,)
+    rmse = np.asarray(metrics["val_rmse"])
+    assert rmse.shape == (k,)
+    boundary = (np.arange(1, k + 1) % eval_every) == 0
+    assert np.isfinite(rmse[boundary]).all()
+    assert np.isnan(rmse[~boundary]).all()
+
+
+def test_custom_traceable_eval_fn_legacy_and_canonical():
+    """Both eval_fn spellings run in-scan: legacy f(pop) (auto-wrapped)
+    and canonical f(pop, val_x, val_y); histories agree when they
+    compute the same metric."""
+    x, y, counts = _toy_fed()
+    vx, vy = _val_set()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=4)
+    tr = GluADFL(LSTMModel(hidden=8).as_model(), sgd(1e-2), cfg)
+
+    def canonical(pop, val_x, val_y):
+        pred = tr.model.apply(pop, val_x)
+        return {"val_rmse": jnp.sqrt(jnp.mean(jnp.square(pred - val_y)))}
+
+    def legacy(pop):  # closes over the val set, ignores scan constants
+        pred = tr.model.apply(pop, vx)
+        return {"val_rmse": jnp.sqrt(jnp.mean(jnp.square(pred - vy)))}
+
+    _, h_canon, _ = tr.train(jax.random.PRNGKey(3), x, y, counts, batch_size=8,
+                             eval_every=2, eval_fn=canonical, val_data=(vx, vy))
+    _, h_legacy, _ = tr.train(jax.random.PRNGKey(3), x, y, counts, batch_size=8,
+                              eval_every=2, eval_fn=legacy)
+    assert [h["round"] for h in h_canon if "val_rmse" in h] == [1, 3]
+    for a, b in zip(h_canon, h_legacy):
+        if "val_rmse" in a:
+            np.testing.assert_allclose(a["val_rmse"], b["val_rmse"], atol=1e-6)
+
+
+def test_non_float_eval_output_rejected():
+    """The NaN off-boundary sentinel needs float outputs — an int metric
+    must raise, not silently corrupt."""
+    x, y, counts = _toy_fed()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=2)
+    tr = GluADFL(LSTMModel(hidden=8).as_model(), sgd(1e-2), cfg)
+    with pytest.raises(TypeError, match="floating"):
+        tr.train(jax.random.PRNGKey(0), x, y, counts, batch_size=8,
+                 eval_every=1, eval_fn=lambda pop, vx, vy: {"n": jnp.int32(1)})
+
+
+def test_loop_engine_still_honors_host_callbacks():
+    """engine="loop" remains the debug path for impure host callbacks
+    (side effects between rounds) — explicitly requested, never
+    auto-selected."""
+    x, y, counts = _toy_fed()
+    cfg = FLConfig(topology="ring", num_nodes=6, rounds=6)
+    tr = GluADFL(LSTMModel(hidden=8).as_model(), sgd(1e-2), cfg)
+    calls = []
+    pop, hist, _ = tr.train(
+        jax.random.PRNGKey(0), x, y, counts, batch_size=8, engine="loop",
+        eval_every=2, eval_fn=lambda p: calls.append(1) or {"evald": len(calls)},
+    )
+    assert len(hist) == 6 and len(calls) == 3
+    assert hist[1]["evald"] == 1 and hist[5]["evald"] == 3

@@ -101,20 +101,25 @@ def test_train_scan_engine_matches_loop_engine():
     assert float(tree_l2_norm(tree_sub(pop_s, pop_l))) < 1e-6
 
 
-def test_eval_callback_falls_back_to_loop():
-    """An eval_fn needs the host between rounds: train() must still honor
-    it (the loop fallback) with per-round history intact."""
+def test_eval_no_longer_forces_loop_engine():
+    """The retired auto-fallback: an eval request must NOT silently drop
+    train() back to the per-round Python loop — the scan engine runs it
+    in-scan.  (Host-callback eval under the explicit engine="loop" debug
+    flag is covered in test_streaming_eval.py.)"""
     x, y, counts = _toy_fed()
     m = LSTMModel(hidden=8).as_model()
     cfg = FLConfig(topology="ring", num_nodes=6, rounds=6)
     tr = GluADFL(m, sgd(1e-2), cfg)
-    calls = []
+    rng = np.random.default_rng(1)
+    vx = rng.normal(size=(16, 12)).astype(np.float32)
+    vy = rng.normal(size=(16,)).astype(np.float32)
+    tr._round_jit = None  # scan path must never touch the per-round jit
     pop, hist, _ = tr.train(
         jax.random.PRNGKey(0), x, y, counts, batch_size=8,
-        eval_every=2, eval_fn=lambda p: calls.append(1) or {"evald": len(calls)},
+        eval_every=2, val_data=(vx, vy), chunk=6,
     )
-    assert len(hist) == 6 and len(calls) == 3
-    assert hist[1]["evald"] == 1 and hist[5]["evald"] == 3
+    assert len(hist) == 6
+    assert [h["round"] for h in hist if "val_rmse" in h] == [1, 3, 5]
 
 
 def test_inactive_nodes_bitwise_frozen_across_chunk():
