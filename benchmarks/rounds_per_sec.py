@@ -17,12 +17,19 @@ path under its execution strategies.
                     script forces an 8-device CPU topology when
                     XLA_FLAGS isn't already set);
   * sharded-psum-scan — same, with ``gossip_impl="psum"``: the
-                    memory-scaled reduce-scatter schedule.
+                    memory-scaled reduce-scatter schedule;
+  * multihost-psum-scan — OPTIONAL (``--processes P``, P >= 2): the same
+                    psum schedule but with the node axis spanning P REAL
+                    ``jax.distributed`` processes over localhost TCP
+                    (each forced to 8/P CPU devices) — this row prices
+                    the cross-process hop.  Spawned as subprocesses of
+                    this script; absent from the committed baseline, so
+                    the regression gate ignores it.
 
 Usage:
     PYTHONPATH=src python benchmarks/rounds_per_sec.py \
         [--nodes 32] [--rounds 64] [--hidden 16] [--batch 16] \
-        [--chunk 32] [--eval-every 8]
+        [--chunk 32] [--eval-every 8] [--processes 2]
 
 Writes experiments/paper/rounds_per_sec.json (the bench-regression gate
 compares this against the committed BENCH_rounds_per_sec.json baseline —
@@ -111,6 +118,115 @@ def bench_engine(trainer, x, y, counts, *, rounds: int, batch_size: int,
     return best
 
 
+def _bench_multihost_worker(args) -> None:
+    """One process of the multihost row: join the localhost cluster,
+    place this host's node rows, and time the psum scan engine.  Only
+    process 0 prints the machine-readable MULTIHOST_RPS line."""
+    from repro.launch import multihost
+
+    multihost.initialize(
+        f"127.0.0.1:{args.port}", args.processes, args.multihost_worker
+    )
+    import jax
+
+    from repro.config import FLConfig
+    from repro.core import GluADFL
+    from repro.core.distributed import _default_federation_mesh
+    from repro.models import LSTMModel
+    from repro.optim import sgd
+
+    cfg = FLConfig(topology=args.topology, num_nodes=args.nodes,
+                   rounds=args.rounds, comm_batch=7)
+    trainer = GluADFL(LSTMModel(hidden=args.hidden).as_model(), sgd(1e-2),
+                      cfg, mixer="sharded", gossip_impl="psum")
+    mesh = _default_federation_mesh(args.nodes)
+    x, y, counts = synth_federation(args.nodes, args.windows, 12)
+    gx, gy, gc, _ = multihost.place_federation(mesh, x, y, counts)
+
+    def fresh_state(seed):
+        # outside the timed region, like bench_engine: init cost is not
+        # a property of the engine (train_chunk donates its input)
+        state = trainer.init_sharded(jax.random.PRNGKey(seed), mesh)
+        jax.block_until_ready(state.params)
+        return state
+
+    def run(state):
+        t = 0
+        while t < args.rounds:
+            c = min(args.chunk, args.rounds - t)
+            state, losses = trainer.train_chunk(
+                state, gx, gy, gc, batch_size=args.batch, chunk=c
+            )
+            multihost.fetch_replicated(losses)  # the per-chunk host sync
+            t += c
+        jax.block_until_ready(state.params)
+
+    run(fresh_state(0))  # warmup: compile every chunk shape
+    best = 0.0
+    for rep in range(3):
+        state = fresh_state(1 + rep)
+        multihost.barrier(f"bench_rep_{rep}")  # start reps in lockstep
+        t0 = time.perf_counter()
+        run(state)
+        best = max(best, args.rounds / (time.perf_counter() - t0))
+    if multihost.is_primary():
+        print(f"MULTIHOST_RPS {best:.6f}", flush=True)
+    multihost.barrier("bench_done")
+
+
+def _bench_multihost(args) -> float:
+    """Spawn the P-process cluster (8/P forced CPU devices each) running
+    THIS script in worker mode; return process 0's rounds/sec."""
+    import socket
+    import subprocess
+    import sys
+
+    import jax
+
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    # split the PARENT's device pool (whatever XLA_FLAGS it honored)
+    # across the workers so this row benches the same global device
+    # count as the in-process rows it is read against
+    devices = max(1, len(jax.devices()) // args.processes)
+    env = dict(os.environ)
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={devices}"]
+    )
+    procs = [
+        subprocess.Popen(
+            [sys.executable, __file__,
+             "--multihost-worker", str(i), "--processes", str(args.processes),
+             "--port", str(port), "--nodes", str(args.nodes),
+             "--rounds", str(args.rounds), "--windows", str(args.windows),
+             "--hidden", str(args.hidden), "--batch", str(args.batch),
+             "--chunk", str(args.chunk), "--topology", args.topology],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env,
+        )
+        for i in range(args.processes)
+    ]
+    outs = []
+    try:
+        for p in procs:
+            outs.append(p.communicate(timeout=1200))
+    finally:
+        # a crashed worker leaves its siblings blocked at the
+        # distributed barrier — never orphan them
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for p, (out, err) in zip(procs, outs):
+        if p.returncode != 0:
+            raise RuntimeError(f"multihost bench worker failed:\n{err[-3000:]}")
+    for line in outs[0][0].splitlines():
+        if line.startswith("MULTIHOST_RPS "):
+            return float(line.split()[1])
+    raise RuntimeError(f"no MULTIHOST_RPS line:\n{outs[0][0][-2000:]}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nodes", type=int, default=32)
@@ -123,7 +239,18 @@ def main(argv=None):
                     help="streaming-eval cadence for the scan-eval row "
                          "(0 disables the row)")
     ap.add_argument("--topology", default="random")
+    ap.add_argument("--processes", type=int, default=0,
+                    help="add the multihost-psum-scan row: split the node "
+                         "axis over this many REAL jax.distributed "
+                         "processes (0 = skip the row)")
+    ap.add_argument("--multihost-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)  # internal: worker process id
+    ap.add_argument("--port", type=int, default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+
+    if args.multihost_worker is not None:
+        _bench_multihost_worker(args)
+        return None
 
     import jax
 
@@ -162,6 +289,9 @@ def main(argv=None):
                            engine=engine, eval_every=eval_every,
                            val_data=(val_x, val_y))
         results[name] = rps
+
+    if args.processes and args.processes >= 2:
+        results["multihost-psum-scan"] = _bench_multihost(args)
 
     out = {"config": vars(args), "devices": len(jax.devices()),
            "rounds_per_sec": results,

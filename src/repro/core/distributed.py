@@ -27,6 +27,16 @@ At fleet scale the federation axis N is sharded over the mesh's node axis
 
 All paths are ``shard_map``s so the collective schedule is explicit and
 the dry-run can count its bytes.
+
+Multi-host: every shard body above indexes the node axis GLOBALLY — the
+mixing-matrix row/column blocks are sliced by shard position on the mesh,
+not by process — so the same programs lower unchanged when the federation
+mesh spans ``jax.distributed`` processes (the all-gather / psum-scatter /
+ppermute become cross-host transfers).  What IS per-process is data
+residence: :func:`addressable_node_rows` names the contiguous global row
+interval whose shards live on the calling process, which is the contract
+``launch.multihost.place_federation`` fulfills when it materializes each
+host's CGM windows.
 """
 from __future__ import annotations
 
@@ -89,6 +99,40 @@ def psum_gossip_shard(w, mix_cols, *, axis: str):
     contrib = jnp.einsum("nm,md->nd", mix_cols, w.astype(jnp.float32))
     out = jax.lax.psum_scatter(contrib, axis, scatter_dimension=0, tiled=True)
     return out.astype(w.dtype)
+
+
+def process_row_slice(sharding: NamedSharding, global_shape: tuple) -> slice:
+    """The contiguous block of axis-0 GLOBAL rows whose shards live on
+    THIS process's devices.  Federation meshes order devices by process,
+    so each host's rows are one contiguous [lo, hi) interval; anything
+    else (interleaved placement) is a bug worth failing loudly on."""
+    idx = sharding.addressable_devices_indices_map(tuple(global_shape))
+    if not idx:
+        raise ValueError(
+            f"process {jax.process_index()} owns no shards of the "
+            f"federation mesh (width {sharding.mesh.shape}) — pick a node "
+            f"count whose mesh width spreads over every process"
+        )
+    rows = sorted(
+        {(s[0].start or 0, s[0].stop if s[0].stop is not None else global_shape[0])
+         for s in idx.values()}
+    )
+    lo, hi = rows[0][0], rows[-1][1]
+    covered = sum(b - a for a, b in rows)
+    if covered != hi - lo:
+        raise ValueError(f"non-contiguous per-process rows: {rows}")
+    return slice(lo, hi)
+
+
+def addressable_node_rows(mesh: Mesh, num_nodes: int) -> slice:
+    """The contiguous [lo, hi) interval of GLOBAL federation rows whose
+    shards are addressable from this process under ``mesh``'s first
+    (node) axis.  Single-process meshes own everything; multi-host
+    meshes split the interval at process boundaries (device order is by
+    process, so each host's rows are contiguous — asserted by
+    :func:`process_row_slice`)."""
+    sharding = NamedSharding(mesh, P(mesh.axis_names[0]))
+    return process_row_slice(sharding, (num_nodes,))
 
 
 _FED_MESH_CACHE: dict = {}

@@ -96,6 +96,17 @@ MIXERS = ("tree", "kernel", "sharded")
 DEFAULT_CHUNK = 32
 
 
+def _to_host(v):
+    """numpy copy of a per-chunk device output (losses, eval records).
+    Multi-host global arrays are not fully addressable, so they come
+    back through their replicated local shard instead of np.asarray."""
+    if isinstance(v, jax.Array) and not v.is_fully_addressable:
+        from repro.launch.multihost import fetch_replicated
+
+        return fetch_replicated(v)
+    return np.asarray(v)
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class FLState:
@@ -165,7 +176,10 @@ class GluADFL:
         self._eval_wrappers: dict[int, Callable] = {}
 
     # ------------------------------------------------------------------
-    def init(self, key, example_x) -> FLState:
+    def init(self, key, example_x=None) -> FLState:
+        """Fresh federation state (``example_x`` is unused — the models
+        init from shapes in their own config — and kept only for
+        call-site back-compat)."""
         n = self.cfg.num_nodes
         keys = jax.random.split(key, n + 1)
         params = jax.vmap(self.model.init)(keys[:n])
@@ -176,6 +190,44 @@ class GluADFL:
             staleness=jnp.zeros((n,), jnp.float32),
             round=jnp.zeros((), jnp.int32),
             key=keys[n],
+        )
+
+    def state_shardings(self, mesh) -> FLState:
+        """NamedShardings for every ``FLState`` leaf under a node-sharded
+        federation mesh: node-stacked leaves (params/opt-state leaves the
+        vmapped init gave a leading ``(N, ...)`` axis, staleness) split
+        over the mesh's first axis; the round counter and RNG key are
+        replicated UNCONDITIONALLY (the key is shape ``(2,)`` and must
+        never trip the leading-dim heuristic when ``num_nodes == 2``)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        n = self.cfg.num_nodes
+        axis = mesh.axis_names[0]
+        node = NamedSharding(mesh, P(axis))
+        repl = NamedSharding(mesh, P())
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        stacked = lambda tree: jax.tree.map(
+            lambda s: node if s.ndim >= 1 and s.shape[0] == n else repl, tree
+        )
+        return FLState(
+            params=stacked(shapes.params),
+            opt_state=stacked(shapes.opt_state),
+            staleness=node,
+            round=repl,
+            key=repl,
+        )
+
+    def init_sharded(self, key, mesh) -> FLState:
+        """Multi-host-safe init: the state is BORN node-sharded on the
+        (possibly process-spanning) federation mesh — every process runs
+        the same compiled init from a replicated key and only ever
+        materializes its own node rows.  Single-process meshes work too
+        (it is then just an explicitly-placed :meth:`init`)."""
+        from repro.launch.multihost import replicate
+
+        shardings = self.state_shardings(mesh)
+        return jax.jit(self.init, out_shardings=shardings)(
+            replicate(mesh, np.asarray(key))
         )
 
     # ------------------------------------------------------------------
@@ -464,19 +516,53 @@ class GluADFL:
           selected automatically): per-round Python loop, one jit
           dispatch + host sync per round; ``eval_fn`` may be an
           arbitrary host callback (side effects, non-traceable code).
+          Single-process only (its eval callback runs EAGERLY on the
+          population params, which are not addressable across hosts).
+
+        Multi-host: after ``launch.multihost.initialize`` this method is
+        process-count aware — it requires ``mixer="sharded"``, places
+        host-side ``x/y/counts`` node-sharded on the global federation
+        mesh (each process materializes only its own rows; pre-placed
+        global ``jax.Array`` inputs are used as-is), replicates the
+        validation set, and inits the state with :meth:`init_sharded`.
+        Every process runs the identical program and assembles the
+        identical history from the replicated per-round losses.
 
         History is identical either way: one record per round, eval keys
         merged into the boundary rounds' records.
         """
         assert engine in ("scan", "loop"), engine
         rounds = rounds if rounds is not None else self.cfg.rounds
-        x, y = jnp.asarray(x), jnp.asarray(y)
-        counts = jnp.asarray(counts)
-        val_x = val_y = None
-        if val_data is not None:
-            val_x, val_y = (jnp.asarray(v) for v in val_data)
+        multihost = jax.process_count() > 1
+        if multihost:
+            if engine == "loop":
+                raise NotImplementedError(
+                    "engine='loop' is the single-process debug fallback; "
+                    "multi-host runs use the scan engine"
+                )
+            if self.mixer != "sharded":
+                raise ValueError(
+                    f"multi-host training needs mixer='sharded' (the node "
+                    f"axis must span processes), got mixer={self.mixer!r}"
+                )
+            from repro.core.distributed import _default_federation_mesh
+            from repro.launch.multihost import place_federation
+
+            mesh = self.mesh or _default_federation_mesh(self.cfg.num_nodes)
+            if not (isinstance(x, jax.Array) and not x.is_fully_addressable):
+                x, y, counts, val_data = place_federation(
+                    mesh, x, y, counts, val_data
+                )
+            val_x, val_y = val_data if val_data is not None else (None, None)
+            state = self.init_sharded(key, mesh)
+        else:
+            x, y = jnp.asarray(x), jnp.asarray(y)
+            counts = jnp.asarray(counts)
+            val_x = val_y = None
+            if val_data is not None:
+                val_x, val_y = (jnp.asarray(v) for v in val_data)
+            state = self.init(key)
         do_eval = bool(eval_every) and (eval_fn is not None or val_data is not None)
-        state = self.init(key, x[0, :1])
         history: list[dict] = []
 
         if engine == "loop":
@@ -507,8 +593,8 @@ class GluADFL:
                     eval_every=eval_every, eval_fn=resolved,
                 )
                 # ONE host sync per chunk, eval records included
-                losses = np.asarray(losses)
-                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                losses = _to_host(losses)
+                metrics = {k: _to_host(v) for k, v in metrics.items()}
                 for i in range(c):
                     rec = {"round": t + i, "loss": float(losses[i])}
                     if (t + i + 1) % eval_every == 0:
@@ -522,19 +608,36 @@ class GluADFL:
                 state, x, y, counts, batch_size=batch_size, chunk=chunk
             )
             # ONE host sync per chunk (vs one per round in the loop engine)
-            for i, lv in enumerate(np.asarray(losses).tolist()):
+            for i, lv in enumerate(_to_host(losses).tolist()):
                 history.append({"round": t + i, "loss": lv})
             t += chunk
-        # drain the tail through the per-round jit: rem < chunk rounds are
-        # not worth compiling a second whole-scan program for
-        for _ in range(rem):
-            state, loss = self._round_jit(state, x, y, counts, batch_size=batch_size)
-            history.append({"round": t, "loss": float(loss)})
-            t += 1
+        if rem and multihost:
+            # the tail must stay a compiled scan: the per-round jit's
+            # float(loss) sync can't read a cross-process scalar eagerly
+            state, losses = self.train_chunk(
+                state, x, y, counts, batch_size=batch_size, chunk=rem
+            )
+            for i, lv in enumerate(_to_host(losses).tolist()):
+                history.append({"round": t + i, "loss": lv})
+            t += rem
+        elif rem:
+            # drain the tail through the per-round jit: rem < chunk rounds
+            # are not worth compiling a second whole-scan program for
+            for _ in range(rem):
+                state, loss = self._round_jit(state, x, y, counts, batch_size=batch_size)
+                history.append({"round": t, "loss": float(loss)})
+                t += 1
         return self.population(state), history, state
 
     # ------------------------------------------------------------------
     @staticmethod
     def population(state: FLState) -> PyTree:
-        """Algorithm 1 lines 15-16: uniform average of all node models."""
+        """Algorithm 1 lines 15-16: uniform average of all node models.
+
+        Multi-host-safe: node-sharded params are reduced inside a jit
+        (eager jnp ops refuse arrays that are not fully addressable);
+        the result is replicated, so every process can fetch it."""
+        leaves = jax.tree.leaves(state.params)
+        if leaves and isinstance(leaves[0], jax.Array) and not leaves[0].is_fully_addressable:
+            return jax.jit(tree_mean)(state.params)
         return tree_mean(state.params)

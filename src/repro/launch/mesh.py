@@ -29,10 +29,35 @@ def make_federation_mesh(num_nodes: int, *, devices: int | None = None):
     """Node-sharded 1-axis mesh for device-parallel gossip: the stacked
     federation axis N is split over the largest available device count
     that divides it (shard_map needs N % devices == 0).  Falls back to a
-    single-device mesh, which degenerates to the local contraction."""
+    single-device mesh, which degenerates to the local contraction.
+
+    Multi-host aware: after ``launch.multihost.initialize`` the device
+    pool is GLOBAL (``jax.devices()`` spans every process, ordered by
+    process index), so the node axis spans hosts and the gossip
+    collectives lower to real cross-host transfers.  The mesh is built
+    from an explicitly BALANCED device list — width/processes devices
+    drawn from every process — because ``jax.make_mesh`` alone takes the
+    FIRST ``width`` global devices, which for width < device count would
+    strand the later processes with zero shards (and no federation
+    rows to place).  Degenerate node counts that no balanced width
+    divides fall back to the first-k mesh; placement then fails loudly
+    on the stranded processes (``multihost.process_row_slice``)."""
     avail = devices or len(jax.devices())
-    width = max(k for k in range(1, avail + 1) if num_nodes % k == 0)
-    return jax.make_mesh((width,), ("node",))
+    procs = jax.process_count()
+    divisors = [k for k in range(1, avail + 1) if num_nodes % k == 0]
+    if procs > 1 and devices is None:
+        by_proc: dict[int, list] = {}
+        for d in jax.devices():
+            by_proc.setdefault(d.process_index, []).append(d)
+        per_proc = min(len(v) for v in by_proc.values())
+        aligned = [k for k in divisors if k % procs == 0 and k // procs <= per_proc]
+        if aligned:
+            width = max(aligned)
+            picked = [
+                d for p in sorted(by_proc) for d in by_proc[p][: width // procs]
+            ]
+            return jax.make_mesh((width,), ("node",), devices=picked)
+    return jax.make_mesh((max(divisors),), ("node",))
 
 
 # per-device budget for the gathered (N, D) federation before the

@@ -1,0 +1,176 @@
+"""Multi-host federation bootstrap — ``jax.distributed`` + per-host data.
+
+The paper's federation lives on devices scattered across a real network
+(§1, Fig 4); inside this repo that means the node axis of the stacked
+federation must span *processes*, not just one process's devices.  This
+module is the whole host-side story:
+
+  * :func:`initialize` — wrap ``jax.distributed.initialize`` with
+    coordinator address / process id / process count taken from explicit
+    arguments or the ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` /
+    ``REPRO_PROCESS_ID`` environment (so launchers and the subprocess
+    test harness share one code path).  On the CPU backend it first
+    selects the gloo cross-process collectives implementation — without
+    it the psum/all-gather lowering deadlocks across hosts.
+  * :func:`place_federation` — per-host data placement: every process
+    computes the same host-side numpy federation (the synthetic twins
+    are deterministic), but only materializes ON DEVICE the rows its
+    addressable shards own (``jax.make_array_from_process_local_data``).
+    No host ever holds another host's node shard in device memory.
+  * :func:`replicate` — scan constants (validation set, counts when the
+    mesh can't split them) placed fully-replicated on the global mesh.
+  * :func:`fetch_replicated` — bring a fully-replicated global array
+    (population params, losses) back to host numpy on EVERY process, via
+    its first addressable shard; the checkpoint gather to process 0 is
+    this plus an ``is_primary()`` guard.
+
+Single-process runs degrade gracefully: ``initialize`` is a no-op when
+``num_processes`` resolves to 1, and the placement helpers fall back to
+plain ``device_put`` so all call sites stay unconditional.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# re-exported: the sharding math lives in core (layering: launch -> core)
+from repro.core.distributed import process_row_slice  # noqa: F401
+
+PyTree = Any
+
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+_initialized = False
+
+
+def _env(name: str, cast=str):
+    v = os.environ.get(name)
+    return cast(v) if v not in (None, "") else None
+
+
+def initialize(
+    coordinator: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+) -> bool:
+    """Join (or skip) the ``jax.distributed`` cluster.
+
+    Arguments default to the ``REPRO_*`` environment.  Returns True when
+    a multi-process cluster was actually formed; False for the
+    single-process no-op (``num_processes`` unset/0/1).  Must run before
+    any jax backend use (device queries count); the caller forces local
+    device count via ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    in the environment, not here, because that flag only binds before the
+    first jax import.
+    """
+    global _initialized
+    coordinator = coordinator or _env(ENV_COORDINATOR)
+    num_processes = num_processes if num_processes is not None else _env(ENV_NUM_PROCESSES, int)
+    process_id = process_id if process_id is not None else _env(ENV_PROCESS_ID, int)
+    if not num_processes or num_processes <= 1:
+        return False
+    if _initialized:
+        return True
+    if coordinator is None or process_id is None:
+        raise ValueError(
+            "multi-process run needs coordinator + process_id "
+            f"(got coordinator={coordinator!r}, process_id={process_id!r})"
+        )
+    # CPU backend: cross-process collectives need gloo (the default
+    # in-process implementation deadlocks across hosts). Harmless on
+    # TPU/GPU where the flag is ignored by the non-CPU backends.
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):  # older/newer jax without the knob
+        pass
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    _initialized = True
+    return True
+
+
+def is_primary() -> bool:
+    """True on the process that owns host-side side effects (checkpoint
+    writes, report printing) — process 0, or the only process."""
+    return jax.process_index() == 0
+
+
+def _mesh_is_local(mesh: Mesh) -> bool:
+    """True when every mesh device belongs to this process (the
+    single-host case, where plain ``device_put`` placement suffices)."""
+    pid = jax.process_index()
+    return all(d.process_index == pid for d in mesh.devices.flat)
+
+
+def shard_rows(mesh: Mesh, arr: np.ndarray, *, axis_name: str = "node"):
+    """Place a host-replicated array node-sharded over ``mesh``: each
+    process device-puts ONLY its own global rows (the per-host placement
+    rule).  Falls back to a plain ``device_put`` on a local mesh."""
+    sh = NamedSharding(mesh, P(axis_name))
+    if _mesh_is_local(mesh):
+        return jax.device_put(arr, sh)
+    local = arr[process_row_slice(sh, arr.shape)]
+    return jax.make_array_from_process_local_data(sh, local, arr.shape)
+
+
+def replicate(mesh: Mesh, arr: np.ndarray):
+    """Fully-replicated placement on the global mesh (scan constants:
+    validation sets, anything every shard reads whole)."""
+    sh = NamedSharding(mesh, P())
+    if _mesh_is_local(mesh):
+        return jax.device_put(arr, sh)
+    return jax.make_array_from_process_local_data(sh, np.asarray(arr), np.shape(arr))
+
+
+def place_federation(mesh: Mesh, x, y, counts, val_data=None):
+    """Per-host placement of the whole federation: node-sharded training
+    tensors (each process materializes only its shard's CGM windows) and
+    a replicated validation set.  Returns ``(x, y, counts, val_data)``
+    as global arrays ready for the jitted engine."""
+    x = shard_rows(mesh, np.asarray(x))
+    y = shard_rows(mesh, np.asarray(y))
+    counts = shard_rows(mesh, np.asarray(counts))
+    if val_data is not None:
+        val_data = tuple(replicate(mesh, np.asarray(v)) for v in val_data)
+    return x, y, counts, val_data
+
+
+def fetch_replicated(tree: PyTree) -> PyTree:
+    """Host numpy copy of a tree of fully-replicated (or local) arrays.
+
+    Multi-process global arrays are not fully addressable, so plain
+    ``np.asarray`` refuses them even when every process holds a complete
+    copy; read the first addressable shard instead.  Every process gets
+    the value (cheap — it is local by construction); callers that only
+    want one writer guard with :func:`is_primary`.
+    """
+
+    def leaf(l):
+        if isinstance(l, jax.Array) and not l.is_fully_addressable:
+            if not l.sharding.is_fully_replicated:
+                raise ValueError(
+                    "fetch_replicated needs fully-replicated arrays; got "
+                    f"sharding {l.sharding}"
+                )
+            return np.asarray(l.addressable_shards[0].data)
+        return np.asarray(l)
+
+    return jax.tree.map(leaf, tree)
+
+
+def barrier(name: str = "repro_barrier") -> None:
+    """Sync all processes (e.g. before process 0 reads files others
+    write, or before teardown).  No-op single-process."""
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+
+        multihost_utils.sync_global_devices(name)

@@ -3,7 +3,7 @@ CPU; the full configs lower via launch.dryrun).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --tokens 16
 
-Builds the reduced variant of ``--arch``, prefim ills a prompt, then
+Builds the reduced variant of ``--arch``, prefills a prompt, then
 greedy-decodes ``--tokens`` tokens through the KV-cache/state decode
 path — the same code the decode_32k / long_500k dry-runs lower at
 production shape.

@@ -38,6 +38,35 @@ Gossip impl (``--mixer sharded`` only)
     / big-model schedule;
   * ``--gossip-impl auto``      — pick by the per-device memory the
     gathered federation would need (``launch.mesh.choose_gossip_impl``).
+
+Multi-host bootstrap (``--num-processes > 1``)
+----------------------------------------------
+Launch the SAME command on every host, varying only the process id::
+
+    REPRO_COORDINATOR=host0:12345 REPRO_NUM_PROCESSES=4 \
+    REPRO_PROCESS_ID=$RANK PYTHONPATH=src python -m repro.launch.train \
+        --dataset replace-bg --mixer sharded --gossip-impl psum ...
+
+(or the equivalent ``--coordinator/--num-processes/--process-id`` flags;
+flags win over the environment).  Process/data-placement rules:
+
+  * ``launch.multihost.initialize`` joins the ``jax.distributed``
+    cluster FIRST — before any device query — and on CPU selects the
+    gloo cross-process collectives.  The local device count is whatever
+    the backend exposes (force with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` for CPU runs);
+  * the node-axis mesh is GLOBAL (``launch.mesh.make_federation_mesh``
+    prefers widths giving every process the same whole number of
+    shards), so the gossip collective spans hosts;
+  * every process loads the same deterministic dataset host-side but
+    materializes ON DEVICE only its own node rows
+    (``launch.multihost.place_federation``); the validation set is
+    replicated;
+  * multi-host implies ``--mixer sharded`` (auto-selected with a note if
+    the flag disagrees) and the scan engine (``--engine loop`` refuses);
+  * per-patient clinical metrics + the checkpoint are gathered to and
+    written by PROCESS 0 only; all processes join a final barrier so the
+    cluster tears down cleanly.
 """
 from __future__ import annotations
 
@@ -105,9 +134,37 @@ def main():
                          "(per-device O(N*D) gather), psum "
                          "(reduce-scatter, per-device O(N/shards*D)), "
                          "or auto (memory-based choice)")
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator host:port (or env "
+                         "REPRO_COORDINATOR); only with --num-processes > 1")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total processes in the multi-host federation "
+                         "(or env REPRO_NUM_PROCESSES); unset/1 = "
+                         "single-process")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's id in [0, num-processes) (or env "
+                         "REPRO_PROCESS_ID)")
     ap.add_argument("--out", default="experiments/checkpoints")
     ap.add_argument("overrides", nargs="*", help="cfg overrides a.b=c")
     args = ap.parse_args()
+
+    from repro.launch import multihost
+
+    # must precede every device query (mesh building, auto gossip-impl)
+    distributed = multihost.initialize(
+        args.coordinator, args.num_processes, args.process_id
+    )
+    if distributed:
+        print(f"multihost: process {jax.process_index()}/{jax.process_count()} "
+              f"local_devices={jax.local_device_count()} "
+              f"global_devices={jax.device_count()}")
+        if args.mixer not in (None, "sharded"):
+            print(f"multihost: overriding --mixer {args.mixer} -> sharded "
+                  f"(the node axis must span processes)")
+        args.mixer = "sharded"
+        if args.engine == "loop" or args.chunk == 0:
+            raise SystemExit("multihost runs need the scan engine "
+                             "(drop --engine loop / --chunk 0)")
 
     cfg = apply_overrides(ExperimentConfig(), args.overrides)
     fed = load_federated_dataset(args.dataset, fast=args.fast_data,
@@ -155,30 +212,37 @@ def main():
         eval_every=args.eval_every,
         val_data=val_data,
     )
-    print(f"round 0 loss {hist[0]['loss']:.4f} -> round {args.rounds-1} "
-          f"loss {hist[-1]['loss']:.4f}")
-    evals = [h for h in hist if "val_rmse" in h]
-    if evals:
-        print("val RMSE (normalized): " + "  ".join(
-            f"r{h['round']}={h['val_rmse']:.4f}" for h in evals[-5:]))
+    if multihost.is_primary():  # every process holds the same history
+        print(f"round 0 loss {hist[0]['loss']:.4f} -> round {args.rounds-1} "
+              f"loss {hist[-1]['loss']:.4f}")
+        evals = [h for h in hist if "val_rmse" in h]
+        if evals:
+            print("val RMSE (normalized): " + "  ".join(
+                f"r{h['round']}={h['val_rmse']:.4f}" for h in evals[-5:]))
 
-    # per-patient + aggregate clinical metrics
-    preds, ys = [], []
-    for i, p in enumerate(fed.patients):
-        pred = np.asarray(model.apply(pop, jnp.asarray(p.test_x))) * fed.sd + fed.mean
-        m = all_metrics(p.test_y_raw, pred)
-        print(f"  patient {i:3d}: RMSE {m['rmse']:6.2f}  MARD {m['mard']:5.2f}%  "
-              f"gRMSE {m['grmse']:6.2f}  lag {m['time_lag']:4.1f}min")
-        preds.append(pred)
-        ys.append(p.test_y_raw)
-    agg = all_metrics(np.concatenate(ys), np.concatenate(preds))
-    print("population:", {k: round(v, 2) for k, v in agg.items()})
+    # the population model is replicated across every process; the
+    # host-side gather makes it plain numpy so clinical metrics and the
+    # checkpoint run local-only — then PROCESS 0 is the single writer
+    pop = multihost.fetch_replicated(pop)
+    if multihost.is_primary():
+        # per-patient + aggregate clinical metrics
+        preds, ys = [], []
+        for i, p in enumerate(fed.patients):
+            pred = np.asarray(model.apply(pop, jnp.asarray(p.test_x))) * fed.sd + fed.mean
+            m = all_metrics(p.test_y_raw, pred)
+            print(f"  patient {i:3d}: RMSE {m['rmse']:6.2f}  MARD {m['mard']:5.2f}%  "
+                  f"gRMSE {m['grmse']:6.2f}  lag {m['time_lag']:4.1f}min")
+            preds.append(pred)
+            ys.append(p.test_y_raw)
+        agg = all_metrics(np.concatenate(ys), np.concatenate(preds))
+        print("population:", {k: round(v, 2) for k, v in agg.items()})
 
-    out = Path(args.out)
-    out.mkdir(parents=True, exist_ok=True)
-    ckpt = out / f"gluadfl_{args.dataset}_{args.topology}.npz"
-    save_checkpoint(ckpt, pop)
-    print(f"checkpoint -> {ckpt}")
+        out = Path(args.out)
+        out.mkdir(parents=True, exist_ok=True)
+        ckpt = out / f"gluadfl_{args.dataset}_{args.topology}.npz"
+        save_checkpoint(ckpt, pop)
+        print(f"checkpoint -> {ckpt}")
+    multihost.barrier("train_done")
 
 
 if __name__ == "__main__":

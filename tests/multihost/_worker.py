@@ -1,0 +1,123 @@
+"""Multi-host test worker — one real process of a localhost federation.
+
+Spawned by ``tests/multihost/test_multiprocess.py`` (never imported):
+every worker of a run gets the same flags except ``--process-id``, forms
+a ``jax.distributed`` cluster over localhost TCP (``--num-processes 1``
+skips the cluster entirely — that run IS the single-process reference),
+trains the identical small federation through ``GluADFL`` with
+``mixer="sharded"`` for each requested gossip impl, and prints one
+machine-readable ``RESULT {json}`` line from process 0.
+
+The payload carries everything the harness compares across process
+topologies: the population-parameter vector, the per-round loss history,
+and the streaming-eval records per impl — plus bootstrap facts (device
+counts, this process's addressable node rows) for the placement test.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--num-processes", type=int, required=True)
+    ap.add_argument("--process-id", type=int, required=True)
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--mode", default="train", choices=["train", "bootstrap"])
+    ap.add_argument("--impls", default="allgather,psum")
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--eval-every", type=int, default=3)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.launch import multihost
+
+    distributed = multihost.initialize(
+        f"127.0.0.1:{args.port}", args.num_processes, args.process_id
+    )
+    assert distributed == (args.num_processes > 1)
+
+    import jax
+
+    from repro.launch.mesh import make_federation_mesh
+
+    result: dict = {
+        "process_count": jax.process_count(),
+        "device_count": jax.device_count(),
+        "local_device_count": jax.local_device_count(),
+    }
+
+    if args.mode == "bootstrap":
+        from repro.core.distributed import addressable_node_rows
+
+        mesh = make_federation_mesh(args.nodes)
+        rows = addressable_node_rows(mesh, args.nodes)
+        result.update(
+            mesh_width=mesh.shape["node"],
+            mesh_process_span=len({d.process_index for d in mesh.devices.flat}),
+            rows=[rows.start, rows.stop],
+        )
+        # per-host placement: only this process's rows are materialized
+        x = np.arange(args.nodes * 3, dtype=np.float32).reshape(args.nodes, 3)
+        gx = multihost.shard_rows(mesh, x)
+        local_rows = sorted(
+            s.index[0].start or 0 for s in gx.addressable_shards
+        )
+        result["placed_first_local_row"] = local_rows[0]
+        result["placed_rows_elems"] = int(
+            sum(np.asarray(s.data).size for s in gx.addressable_shards)
+        )
+        # the global view must reconstruct exactly on every process
+        gathered = multihost.fetch_replicated(
+            jax.jit(lambda a: a, out_shardings=jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()))(gx)
+        )
+        np.testing.assert_array_equal(gathered, x)
+    else:
+        from repro.config import FLConfig
+        from repro.core import GluADFL
+        from repro.models import LSTMModel
+        from repro.optim import sgd
+        from repro.utils.pytree import tree_to_vector
+
+        rng = np.random.default_rng(0)
+        n = args.nodes
+        x = rng.normal(size=(n, 40, 12)).astype(np.float32)
+        y = (x @ rng.normal(size=(12,)).astype(np.float32)).astype(np.float32)
+        counts = np.full((n,), 40, np.int32)
+        vx = rng.normal(size=(16, 12)).astype(np.float32)
+        vy = rng.normal(size=(16,)).astype(np.float32)
+        cfg = FLConfig(topology="random", num_nodes=n, rounds=args.rounds,
+                       comm_batch=3, inactive_ratio=0.25)
+
+        for impl in args.impls.split(","):
+            trainer = GluADFL(
+                LSTMModel(hidden=8).as_model(), sgd(1e-2), cfg,
+                mixer="sharded", gossip_impl=impl,
+            )
+            pop, hist, _ = trainer.train(
+                jax.random.PRNGKey(0), x, y, counts, batch_size=8,
+                chunk=args.chunk, eval_every=args.eval_every,
+                val_data=(vx, vy),
+            )
+            pop = multihost.fetch_replicated(pop)
+            result[impl] = {
+                "pop_vec": np.asarray(tree_to_vector(pop)).tolist(),
+                "losses": [h["loss"] for h in hist],
+                "evals": {str(h["round"]): h["val_rmse"]
+                          for h in hist if "val_rmse" in h},
+            }
+
+    if multihost.is_primary():
+        print("RESULT " + json.dumps(result), flush=True)
+    multihost.barrier("worker_done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

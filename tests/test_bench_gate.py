@@ -1,0 +1,107 @@
+"""Unit tests for the CI bench-regression gate
+(``benchmarks/check_bench_regression.py``) — the gate guards every PR's
+engine-speed claim, so its own edge cases (missing rows, exact-threshold
+ratios, the scan-eval floor) must be pinned down too."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def gate():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_regression", ROOT / "benchmarks" / "check_bench_regression.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules.setdefault("check_bench_regression", mod)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _report(rps: dict, eval_rel: float | None = None) -> dict:
+    out = {"rounds_per_sec": dict(rps)}
+    if eval_rel is not None:
+        out["scan_eval_relative_throughput"] = eval_rel
+    return out
+
+
+def _run(gate, tmp_path, baseline, fresh, *extra) -> int:
+    b = tmp_path / "baseline.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(baseline))
+    f.write_text(json.dumps(fresh))
+    return gate.main(["--baseline", str(b), "--fresh", str(f), *extra])
+
+
+BASE = {"loop": 10.0, "scan": 100.0, "sharded-scan": 50.0}
+
+
+def test_green_when_ratios_hold(gate, tmp_path):
+    assert _run(gate, tmp_path, _report(BASE), _report(BASE)) == 0
+
+
+def test_missing_baseline_row_in_fresh_fails(gate, tmp_path):
+    fresh = {k: v for k, v in BASE.items() if k != "sharded-scan"}
+    assert _run(gate, tmp_path, _report(BASE), _report(fresh)) == 1
+
+
+def test_extra_fresh_row_is_ignored(gate, tmp_path):
+    """New engines (e.g. an optional multihost row) may appear in the
+    fresh run without a baseline — only baseline rows are gated."""
+    fresh = dict(BASE, **{"multihost-psum-scan": 1.0})
+    assert _run(gate, tmp_path, _report(BASE), _report(fresh)) == 0
+
+
+def test_exactly_at_threshold_ratio_passes(gate, tmp_path):
+    """The floor is inclusive: a speedup ratio at exactly
+    baseline * (1 - threshold) must NOT fail (f < floor, not <=)."""
+    # baseline scan ratio 10x, threshold 0.2 -> floor 8x exactly
+    fresh = {"loop": 10.0, "scan": 80.0, "sharded-scan": 40.0}
+    assert _run(gate, tmp_path, _report(BASE), _report(fresh)) == 0
+
+
+def test_just_below_threshold_ratio_fails(gate, tmp_path):
+    fresh = {"loop": 10.0, "scan": 79.9, "sharded-scan": 40.0}
+    assert _run(gate, tmp_path, _report(BASE), _report(fresh)) == 1
+
+
+def test_scan_eval_floor_gate(gate, tmp_path):
+    ok = _run(gate, tmp_path, _report(BASE), _report(BASE, eval_rel=0.95))
+    at = _run(gate, tmp_path, _report(BASE), _report(BASE, eval_rel=0.9))
+    below = _run(gate, tmp_path, _report(BASE), _report(BASE, eval_rel=0.89))
+    assert (ok, at, below) == (0, 0, 1)
+    # the floor is adjustable for noisy runner classes
+    assert _run(gate, tmp_path, _report(BASE), _report(BASE, eval_rel=0.85),
+                "--eval-floor", "0.8") == 0
+
+
+def test_missing_eval_ratio_is_not_gated(gate, tmp_path):
+    """Runs without the scan-eval row (``--eval-every 0``) skip the
+    floor check instead of crashing."""
+    assert _run(gate, tmp_path, _report(BASE, eval_rel=0.95), _report(BASE)) == 0
+
+
+def test_no_loop_row_is_a_hard_error(gate, tmp_path):
+    with pytest.raises(SystemExit, match="loop"):
+        _run(gate, tmp_path, _report({"scan": 5.0}), _report(BASE))
+
+
+def test_absolute_mode_gates_raw_rps(gate, tmp_path):
+    """Ratios identical but every engine 2x slower: relative gate passes,
+    --absolute fails."""
+    halved = {k: v / 2 for k, v in BASE.items()}
+    assert _run(gate, tmp_path, _report(BASE), _report(halved)) == 0
+    assert _run(gate, tmp_path, _report(BASE), _report(halved), "--absolute") == 1
+
+
+def test_update_rewrites_baseline(gate, tmp_path):
+    fresh = _report({"loop": 1.0, "scan": 7.0})
+    rc = _run(gate, tmp_path, _report(BASE), fresh, "--update")
+    assert rc == 0
+    rewritten = json.loads((tmp_path / "baseline.json").read_text())
+    assert rewritten == fresh
