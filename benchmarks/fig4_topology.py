@@ -1,21 +1,44 @@
 """Figure 4: convergence of GluADFL under ring / cluster / random
-topologies (B=7), per dataset — validation RMSE vs communication round."""
+topologies (B=7), per dataset — validation RMSE vs communication round.
+
+Default path: the whole topology grid runs as ONE batched device program
+via ``GluADFL.train_sweep`` (stacked adjacency matrices, vmapped chunk
+scan, in-scan streaming eval returning a ``(grid, chunk)`` record
+stack).  ``--serial`` (or ``run(serial=True)``) keeps the original
+one-config-at-a-time loop as a parity fallback — same numbers, G compiles
+and G executions instead of one.
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import DATASETS, Scale, load, save_json
-from repro.config import FLConfig
-from repro.core import GluADFL
+from repro.config import FLConfig, SweepConfig
+from repro.core import GluADFL, SweepGrid
 from repro.models import LSTMModel
 from repro.optim import adam
 
-TOPOLOGIES = ["ring", "cluster", "random"]
+# Fig 4 sweeps the same canonical topology axis as Fig 5
+TOPOLOGIES = list(SweepConfig().topologies)
 
 
-def run(scale: Scale | None = None, datasets=None, eval_every: int = 10) -> dict:
+def _val_rmse_fn(model, fed):
+    """Traceable (mg/dL) val RMSE: runs INSIDE the scanned chunk via the
+    streaming-eval branch — no per-round host sync."""
+
+    def val_rmse(params, val_x, val_y):
+        pred = model.apply(params, val_x) * fed.sd + fed.mean
+        return {"val_rmse": jnp.sqrt(jnp.mean(jnp.square(pred - val_y)))}
+
+    return val_rmse
+
+
+def run(scale: Scale | None = None, datasets=None, eval_every: int = 10,
+        serial: bool = False) -> dict:
     scale = scale or Scale()
     datasets = datasets or DATASETS
     out = {}
@@ -24,26 +47,42 @@ def run(scale: Scale | None = None, datasets=None, eval_every: int = 10) -> dict
         model = LSTMModel(hidden=scale.hidden).as_model()
         vx = np.concatenate([p.val_x for p in fed.patients])
         vy_raw = np.concatenate([(p.val_y * fed.sd + fed.mean) for p in fed.patients])
-
-        # traceable (mg/dL) val RMSE: runs INSIDE the scanned chunk via
-        # the streaming-eval branch — no per-round host sync
-        def val_rmse(params, val_x, val_y):
-            pred = model.apply(params, val_x) * fed.sd + fed.mean
-            return {"val_rmse": jnp.sqrt(jnp.mean(jnp.square(pred - val_y)))}
+        val_rmse = _val_rmse_fn(model, fed)
 
         out[ds] = {}
-        for topo in TOPOLOGIES:
-            cfg = FLConfig(topology=topo, num_nodes=fed.num_nodes, comm_batch=7,
-                           rounds=scale.rounds)
+        if serial:
+            for topo in TOPOLOGIES:
+                cfg = FLConfig(topology=topo, num_nodes=fed.num_nodes,
+                               comm_batch=7, rounds=scale.rounds)
+                tr = GluADFL(model, adam(2e-3), cfg)
+                _, hist, _ = tr.train(
+                    jax.random.PRNGKey(0), fed.x, fed.y, fed.counts,
+                    batch_size=scale.batch_size, eval_every=eval_every,
+                    eval_fn=val_rmse, val_data=(vx, vy_raw),
+                )
+                out[ds][topo] = [(h["round"], h["val_rmse"])
+                                 for h in hist if "val_rmse" in h]
+        else:
+            # the whole topology axis as one vmapped program: the grid's
+            # per-scenario (round, val_rmse) curves come back as a
+            # (grid, chunk) record stack from the in-scan eval branch
+            grid = SweepGrid.build(TOPOLOGIES, [0.0], [0],
+                                   num_nodes=fed.num_nodes)
+            cfg = FLConfig(topology=TOPOLOGIES[0], num_nodes=fed.num_nodes,
+                           comm_batch=7, rounds=scale.rounds)
             tr = GluADFL(model, adam(2e-3), cfg)
-            _, hist, _ = tr.train(
-                jax.random.PRNGKey(0), fed.x, fed.y, fed.counts,
+            _, hists, _ = tr.train_sweep(
+                fed.x, fed.y, fed.counts, grid=grid,
                 batch_size=scale.batch_size, eval_every=eval_every,
                 eval_fn=val_rmse, val_data=(vx, vy_raw),
             )
-            curve = [(h["round"], h["val_rmse"]) for h in hist if "val_rmse" in h]
-            out[ds][topo] = curve
-            print(f"[{ds:11s}] {topo:8s} final val RMSE {curve[-1][1]:.2f}")
+            for (topo, _, _), hist in zip(grid.labels, hists):
+                out[ds][topo] = [(h["round"], h["val_rmse"])
+                                 for h in hist if "val_rmse" in h]
+
+        for topo in TOPOLOGIES:
+            print(f"[{ds:11s}] {topo:8s} final val RMSE "
+                  f"{out[ds][topo][-1][1]:.2f}")
         finals = {t: out[ds][t][-1][1] for t in TOPOLOGIES}
         order = sorted(finals, key=finals.get)
         print(f"[{ds:11s}] convergence order: {' < '.join(order)} "
@@ -53,4 +92,9 @@ def run(scale: Scale | None = None, datasets=None, eval_every: int = 10) -> dict
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--serial", action="store_true",
+                    help="one-config-at-a-time parity fallback instead "
+                         "of the batched train_sweep path")
+    args = ap.parse_args()
+    run(serial=args.serial)

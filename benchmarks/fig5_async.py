@@ -1,34 +1,85 @@
 """Figure 5: robustness to inactive-node ratio per topology — the
 paper's asynchrony/wait-free experiment (stability up to ~70% inactive,
-random topology most robust)."""
+random topology most robust).
+
+Default path: the full (topology x inactive-ratio x seed) grid runs as
+ONE batched device program via ``GluADFL.train_sweep`` — stacked
+per-scenario mixing inputs, vmapped chunk scan, a couple of compiled
+executions for the whole figure.  ``--serial`` (or ``run(serial=True)``)
+keeps the original per-config loop as a parity fallback.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
-from benchmarks.common import DATASETS, Scale, eval_population, load, save_json, train_gluadfl
+from benchmarks.common import (
+    DATASETS, Scale, eval_population, load, save_json, train_gluadfl,
+)
+from repro.config import FLConfig, SweepConfig
+from repro.core import GluADFL, SweepGrid
+from repro.models import LSTMModel
+from repro.optim import adam
+from repro.utils.pytree import tree_index
 
-RATIOS = [0.0, 0.3, 0.5, 0.7, 0.9]
-TOPOLOGIES = ["ring", "cluster", "random"]
+# the canonical Fig-5 grid lives in config.SweepConfig
+RATIOS = list(SweepConfig().inactive_ratios)
+TOPOLOGIES = list(SweepConfig().topologies)
 
 
-def run(scale: Scale | None = None, datasets=None, ratios=None) -> dict:
+def _run_sweep(ds: str, scale: Scale, ratios) -> dict:
+    """One train_sweep call per dataset: G = topologies x ratios x seeds
+    scenarios in a single vmapped program; test-split clinical metrics
+    are evaluated host-side per scenario and averaged over seeds."""
+    fed = load(ds, scale)
+    model = LSTMModel(hidden=scale.hidden).as_model()
+    seeds = list(range(scale.seeds))
+    grid = SweepGrid.build(TOPOLOGIES, ratios, seeds, num_nodes=fed.num_nodes)
+    cfg = FLConfig(topology=TOPOLOGIES[0], num_nodes=fed.num_nodes,
+                   comm_batch=7, rounds=scale.rounds)
+    tr = GluADFL(model, adam(2e-3), cfg)
+    pops, _, _ = tr.train_sweep(fed.x, fed.y, fed.counts, grid=grid,
+                                batch_size=scale.batch_size)
+    rmse_by = {}
+    for g, (topo, ratio, _) in enumerate(grid.labels):
+        m = eval_population(model, tree_index(pops, g), fed)
+        rmse_by.setdefault((topo, ratio), []).append(m["rmse"])
+    return {
+        topo: [(r, float(np.mean(rmse_by[(topo, r)]))) for r in ratios]
+        for topo in TOPOLOGIES
+    }
+
+
+def _run_serial(ds: str, scale: Scale, ratios) -> dict:
+    """Same grid, one config at a time — iterates the same seeds as the
+    sweep path so the two stay numerically comparable."""
+    out = {}
+    for topo in TOPOLOGIES:
+        curve = []
+        for r in ratios:
+            vals = []
+            for seed in range(scale.seeds):
+                model, pop, _, fed = train_gluadfl(
+                    ds, scale, topology=topo, inactive_ratio=r, seed=seed
+                )
+                vals.append(eval_population(model, pop, fed)["rmse"])
+            curve.append((r, float(np.mean(vals))))
+        out[topo] = curve
+    return out
+
+
+def run(scale: Scale | None = None, datasets=None, ratios=None,
+        serial: bool = False) -> dict:
     scale = scale or Scale()
     datasets = datasets or DATASETS
     ratios = ratios or RATIOS
     out = {}
     for ds in datasets:
-        out[ds] = {}
+        out[ds] = (_run_serial if serial else _run_sweep)(ds, scale, ratios)
         for topo in TOPOLOGIES:
-            curve = []
-            for r in ratios:
-                model, pop, _, fed = train_gluadfl(
-                    ds, scale, topology=topo, inactive_ratio=r
-                )
-                m = eval_population(model, pop, fed)
-                curve.append((r, m["rmse"]))
-            out[ds][topo] = curve
             print(f"[{ds:11s}] {topo:8s} " +
-                  "  ".join(f"{r:.0%}:{v:.2f}" for r, v in curve))
+                  "  ".join(f"{r:.0%}:{v:.2f}" for r, v in out[ds][topo]))
         # stability check at 70%
         for topo in TOPOLOGIES:
             base = out[ds][topo][0][1]
@@ -40,4 +91,9 @@ def run(scale: Scale | None = None, datasets=None, ratios=None) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--serial", action="store_true",
+                    help="one-config-at-a-time parity fallback instead "
+                         "of the batched train_sweep path")
+    args = ap.parse_args()
+    run(serial=args.serial)

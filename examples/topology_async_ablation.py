@@ -1,7 +1,9 @@
 """Topology + asynchrony ablation (paper Figs 4-5 in miniature):
-convergence of ring/cluster/random gossip, then robustness as the
-inactive-node ratio rises; also prints each topology's spectral gap —
-the mixing-rate statistic that explains the ordering.
+convergence of ring/cluster/random gossip as the inactive-node ratio
+rises — the WHOLE 3x3 grid trained as ONE batched device program via
+``GluADFL.train_sweep`` (stacked per-scenario adjacency + vmapped chunk
+scan) — plus each topology's spectral gap, the mixing-rate statistic
+that explains the ordering.
 
     PYTHONPATH=src python examples/topology_async_ablation.py
 """
@@ -10,30 +12,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FLConfig
-from repro.core import GluADFL, mixing_matrix, round_adjacency, spectral_gap
+from repro.core import GluADFL, SweepGrid, mixing_matrix, round_adjacency, spectral_gap
 from repro.data import load_federated_dataset
 from repro.models import LSTMModel
 from repro.optim import adam
+from repro.utils.pytree import tree_index
 
 fed = load_federated_dataset("ohiot1dm", fast=True)
 model = LSTMModel(hidden=64).as_model()
 vx = jnp.asarray(np.concatenate([p.val_x for p in fed.patients]))
 vy = np.concatenate([p.val_y * fed.sd + fed.mean for p in fed.patients])
 
+TOPOLOGIES = ("ring", "cluster", "random")
+RATIOS = (0.0, 0.5, 0.8)
+
 print("spectral gaps (higher = faster gossip mixing):")
 ones = jnp.ones((fed.num_nodes,))
-for topo in ("ring", "cluster", "random"):
+for topo in TOPOLOGIES:
     adj = round_adjacency(topo, fed.num_nodes, jax.random.PRNGKey(0), 7)
     print(f"  {topo:8s} {spectral_gap(mixing_matrix(adj, ones, 7)):.4f}")
 
-for inactive in (0.0, 0.5, 0.8):
-    print(f"\ninactive ratio {inactive:.0%}:")
-    for topo in ("ring", "cluster", "random"):
-        cfg = FLConfig(topology=topo, num_nodes=fed.num_nodes, comm_batch=7,
-                       rounds=80, inactive_ratio=inactive)
-        tr = GluADFL(model, adam(2e-3), cfg)
-        pop, hist, _ = tr.train(jax.random.PRNGKey(1), fed.x, fed.y,
-                                fed.counts, batch_size=64)
-        pred = np.asarray(model.apply(pop, vx)) * fed.sd + fed.mean
-        rmse = float(np.sqrt(np.mean((pred - vy) ** 2)))
-        print(f"  {topo:8s} val RMSE {rmse:6.2f}")
+# all 9 (topology, inactive-ratio) scenarios compile and run as a single
+# vmapped scan — one seed key per scenario, federation data broadcast
+grid = SweepGrid.build(TOPOLOGIES, RATIOS, seeds=(1,), num_nodes=fed.num_nodes)
+cfg = FLConfig(num_nodes=fed.num_nodes, comm_batch=7, rounds=80)
+trainer = GluADFL(model, adam(2e-3), cfg)
+pops, hists, _ = trainer.train_sweep(fed.x, fed.y, fed.counts, grid=grid,
+                                     batch_size=64)
+
+rmse = {}
+for g, (topo, ratio, _) in enumerate(grid.labels):
+    pred = np.asarray(model.apply(tree_index(pops, g), vx)) * fed.sd + fed.mean
+    rmse[(topo, ratio)] = float(np.sqrt(np.mean((pred - vy) ** 2)))
+
+for ratio in RATIOS:
+    print(f"\ninactive ratio {ratio:.0%}:")
+    for topo in TOPOLOGIES:
+        print(f"  {topo:8s} val RMSE {rmse[(topo, ratio)]:6.2f}")

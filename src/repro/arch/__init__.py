@@ -1,1 +1,5 @@
+"""Assigned architecture pool: ``build_arch(name)`` assembles any of the
+ten registered transformer-family architectures (dense / MoE / SSM /
+hybrid / enc-dec / VLM) from its :class:`repro.config.ArchConfig`, with
+partition rules for the production meshes (see ``arch/sharding.py``)."""
 from repro.arch.api import Arch, TrainState, build_arch

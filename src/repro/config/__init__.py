@@ -1,6 +1,9 @@
+"""Typed configuration dataclasses + the architecture registry and
+dotted-override CLI parsing (``a.b=c``) — see ``config/base.py``."""
 from repro.config.base import (
     ArchConfig,
     FLConfig,
+    SweepConfig,
     DataConfig,
     TrainConfig,
     ExperimentConfig,

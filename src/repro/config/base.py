@@ -198,6 +198,21 @@ class FLConfig:
 
 
 @dataclass(frozen=True)
+class SweepConfig:
+    """The scenario grid :meth:`repro.core.GluADFL.train_sweep` batches
+    into one compiled program — defaults are the paper's Fig-5 grid
+    (3 topologies x 5 inactive ratios, seed 0).  ``seeds`` is a count:
+    seeds ``0..seeds-1`` each become a scenario replica."""
+
+    topologies: tuple = ("ring", "cluster", "random")
+    inactive_ratios: tuple = (0.0, 0.3, 0.5, 0.7, 0.9)
+    seeds: int = 1
+
+    def seed_list(self) -> tuple:
+        return tuple(range(self.seeds))
+
+
+@dataclass(frozen=True)
 class DataConfig:
     dataset: str = "ohiot1dm"         # ohiot1dm | abc4d | ctr3 | replace-bg
     history_len: int = 12             # L = 12 (2 hours at 5-min sampling)

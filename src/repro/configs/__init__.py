@@ -1,4 +1,6 @@
-# Importing this package populates the architecture registry.
+"""Importing this package populates the architecture registry: one
+module per assigned architecture, each registering its
+:class:`repro.config.ArchConfig` under the id ``--arch`` accepts."""
 from repro.configs import (  # noqa: F401
     glucose_lstm,
     mistral_large_123b,

@@ -1,7 +1,10 @@
-# The paper's primary contribution: asynchronous decentralized federated
-# learning (GluADFL) — topologies, gossip mixing, wait-free scheduling,
-# Algorithm 1, and the baselines it is compared against.
+"""The paper's primary contribution: asynchronous decentralized
+federated learning (GluADFL) — topologies, gossip mixing, wait-free
+scheduling, Algorithm 1, the batched scenario-sweep engine, and the
+baselines it is compared against (FedAvg, MAML/MetaSGD, supervised)."""
 from repro.core.topology import (
+    stacked_adjacency,
+    mixing_matrix_stacked,
     ring_adjacency,
     cluster_adjacency,
     star_adjacency,
@@ -11,14 +14,19 @@ from repro.core.topology import (
     mixing_matrix,
     spectral_gap,
 )
-from repro.core.async_sched import bernoulli_active, markov_active, staleness_update
+from repro.core.async_sched import (
+    bernoulli_active,
+    markov_active,
+    staleness_update,
+    sweep_active_masks,
+)
 from repro.core.gossip import (
     gossip_mix_tree,
     gossip_mix_kernel,
     gossip_mix_dp_kernel,
     sharded_gossip_mix,
 )
-from repro.core.gluadfl import GluADFL, FLState
+from repro.core.gluadfl import GluADFL, FLState, SweepGrid
 from repro.core.fedavg import FedAvg
 from repro.core.meta import MAML, MetaSGD
 from repro.core.supervised import train_supervised

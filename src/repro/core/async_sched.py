@@ -20,8 +20,13 @@ import jax
 import jax.numpy as jnp
 
 
-def bernoulli_active(key, n: int, inactive_ratio: float) -> jnp.ndarray:
-    if inactive_ratio <= 0.0:
+def bernoulli_active(key, n: int, inactive_ratio) -> jnp.ndarray:
+    """iid active mask; ``inactive_ratio`` may be a python float OR a
+    traced scalar (the sweep engine vmaps it over scenarios).  The
+    concrete ``<= 0`` shortcut and the traced ``u >= ratio`` path agree
+    exactly: uniform draws live in [0, 1), so ratio 0 activates every
+    node either way."""
+    if isinstance(inactive_ratio, (int, float)) and inactive_ratio <= 0.0:
         return jnp.ones((n,), jnp.float32)
     u = jax.random.uniform(key, (n,))
     active = (u >= inactive_ratio).astype(jnp.float32)
@@ -29,6 +34,24 @@ def bernoulli_active(key, n: int, inactive_ratio: float) -> jnp.ndarray:
     any_active = jnp.max(active)
     fallback = jnp.zeros((n,)).at[jnp.argmax(u)].set(1.0)
     return jnp.where(any_active > 0, active, fallback)
+
+
+def sweep_active_masks(key, n: int, inactive_ratios: jnp.ndarray) -> jnp.ndarray:
+    """Per-scenario active masks from split keys: one independent key
+    per scenario, each drawing its :func:`bernoulli_active` mask at its
+    own (possibly traced) ratio.  Returns ``(G, N)``; scenario ``g``
+    matches ``bernoulli_active(split(key, G)[g], n, ratios[g])``
+    bitwise.
+
+    This is the grid-level/host-side sampler (activity analyses,
+    schedule visualisation, tests).  Inside ``GluADFL.train_sweep``
+    itself the masks are NOT drawn here: each scenario's round body
+    calls ``bernoulli_active`` on its own scan-carried key chain under
+    ``jax.vmap`` — which is what makes a swept scenario's key stream
+    identical to its serial twin's."""
+    inactive_ratios = jnp.asarray(inactive_ratios)
+    keys = jax.random.split(key, inactive_ratios.shape[0])
+    return jax.vmap(lambda k, r: bernoulli_active(k, n, r))(keys, inactive_ratios)
 
 
 def markov_active(key, prev_active: jnp.ndarray, p_stay_active=0.9, p_stay_inactive=0.7):

@@ -60,6 +60,21 @@ combination consumes the identical key stream: ``train_chunk(chunk=k)``
 matches k sequential ``_round`` calls to float tolerance (tested in
 ``tests/test_train_engine.py``), and inactive nodes stay bitwise frozen
 across a chunk.
+
+Scenario-sweep engine (the paper's ablation grids as ONE program)
+-----------------------------------------------------------------
+The Fig-4/Fig-5 ablations run the same trainer under many
+(topology, inactive-ratio, seed) configurations.  :meth:`train_sweep`
+batches that grid with ``jax.vmap`` over the scanned chunk instead of a
+serial Python loop: a :class:`SweepGrid` carries every per-scenario knob
+as DATA (stacked adjacency matrices + a per-round-resample flag from
+``topology.stacked_adjacency``, ``(G,)`` inactive ratios, ``(G, 2)``
+seed keys), so one compile executes all G scenarios and the streaming
+eval branch returns a ``(G, chunk)`` record stack.  Scenario ``g``
+consumes the identical key stream as ``train(PRNGKey(seed_g))`` under
+the same config — swept results ARE the serial results, just batched
+(``tests/test_sweep.py`` pins the parity; ``benchmarks/rounds_per_sec``
+prices the speedup as the ``sweep-scan`` row).
 """
 from __future__ import annotations
 
@@ -80,7 +95,12 @@ from repro.core.gossip import (
     gossip_mix_tree,
     sharded_gossip_mix,
 )
-from repro.core.topology import mixing_matrix, round_adjacency
+from repro.core.topology import (
+    mixing_matrix,
+    random_adjacency,
+    round_adjacency,
+    stacked_adjacency,
+)
 from repro.models.base import Model
 from repro.optim import Optimizer
 from repro.utils.pytree import tree_mean
@@ -115,6 +135,76 @@ class FLState:
     staleness: jnp.ndarray  # (N,)
     round: jnp.ndarray      # scalar int
     key: jnp.ndarray
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("adjacency", "resample", "inactive_ratio", "init_keys"),
+    meta_fields=("labels",),
+)
+@dataclass
+class SweepGrid:
+    """A batch of G training scenarios for :meth:`GluADFL.train_sweep`.
+
+    Every per-scenario knob the round body consumes is DATA, not
+    structure, so the whole grid runs under one ``jax.vmap``:
+
+      * ``adjacency``      — (G, N, N) static adjacency per scenario
+                             (zeros placeholder for per-round-resampled
+                             topologies), from ``topology.stacked_adjacency``;
+      * ``resample``       — (G,) {0,1}: 1 = re-draw the graph each round
+                             from that round's key ("random" topology);
+      * ``inactive_ratio`` — (G,) Fig-5 asynchrony ratio per scenario;
+      * ``init_keys``      — (G, 2) per-scenario PRNG init keys
+                             (``PRNGKey(seed)`` — the exact key a serial
+                             ``train(PRNGKey(seed), ...)`` run would use);
+      * ``labels``         — static tuple of ``(topology, ratio, seed)``
+                             naming scenario g for the host side.
+    """
+
+    adjacency: jnp.ndarray
+    resample: jnp.ndarray
+    inactive_ratio: jnp.ndarray
+    init_keys: jnp.ndarray
+    labels: tuple
+
+    @property
+    def size(self) -> int:
+        return len(self.labels)
+
+    @classmethod
+    def build(
+        cls,
+        topologies,
+        inactive_ratios,
+        seeds=(0,),
+        *,
+        num_nodes: int,
+        cluster_size: int = 4,
+    ) -> "SweepGrid":
+        """Cross-product grid (topology-major, then ratio, then seed) —
+        the paper's Fig-5 layout: ``build(("ring","cluster","random"),
+        (0.0, 0.3, 0.5, 0.7, 0.9), num_nodes=N)``."""
+        scenarios = [
+            (str(t), float(r), int(s))
+            for t in topologies
+            for r in inactive_ratios
+            for s in seeds
+        ]
+        if not scenarios:
+            raise ValueError("empty sweep grid")
+        adjacency, resample = stacked_adjacency(
+            [t for t, _, _ in scenarios], num_nodes, cluster_size
+        )
+        return cls(
+            adjacency=adjacency,
+            resample=resample,
+            inactive_ratio=jnp.asarray([r for _, r, _ in scenarios], jnp.float32),
+            init_keys=jnp.stack(
+                [jax.random.PRNGKey(s) for _, _, s in scenarios]
+            ),
+            labels=tuple(scenarios),
+        )
 
 
 class GluADFL:
@@ -171,6 +261,13 @@ class GluADFL:
             static_argnames=("batch_size", "chunk", "eval_every", "eval_fn"),
             donate_argnums=(0,),
         )
+        self._sweep_chunk_jit = jax.jit(
+            self._sweep_chunk,
+            static_argnames=("batch_size", "chunk", "eval_every", "eval_fn"),
+            donate_argnums=(0,),
+        )
+        self._sweep_init_jit = jax.jit(jax.vmap(self.init))
+        self._sweep_pop_jit = jax.jit(jax.vmap(tree_mean))
         # canonical eval fns are jit-static: keep them identity-stable so
         # repeated train() calls hit the compile cache
         self._eval_wrappers: dict[int, Callable] = {}
@@ -362,6 +459,7 @@ class GluADFL:
         counts,
         val_x=None,
         val_y=None,
+        scenario=None,
         *,
         batch_size: int,
         eval_every: int = 0,
@@ -371,13 +469,34 @@ class GluADFL:
         directly scannable (train_chunk) and jit-able (loop engine).
         ``aux`` is the scalar loss, or ``(loss, metrics_dict)`` when the
         streaming-eval branch is armed (``eval_every > 0`` with an
-        ``eval_fn``)."""
+        ``eval_fn``).
+
+        ``scenario`` is ``None`` for the config-driven path, or a traced
+        ``(adjacency (N,N), resample scalar, inactive_ratio scalar)``
+        triple overriding the config's topology/asynchrony — the sweep
+        engine vmaps this body over a stacked grid of such triples.  The
+        key stream is IDENTICAL either way (every round splits the same
+        four subkeys), so a swept scenario reproduces its serial twin."""
         cfg = self.cfg
         n = cfg.num_nodes
         key, k_act, k_top, k_batch = jax.random.split(state.key, 4)
 
-        active = bernoulli_active(k_act, n, cfg.inactive_ratio)
-        adj = round_adjacency(cfg.topology, n, k_top, cfg.comm_batch, cfg.cluster_size)
+        if scenario is None:
+            active = bernoulli_active(k_act, n, cfg.inactive_ratio)
+            adj = round_adjacency(
+                cfg.topology, n, k_top, cfg.comm_batch, cfg.cluster_size
+            )
+        else:
+            adj_static, resample, inactive_ratio = scenario
+            active = bernoulli_active(k_act, n, inactive_ratio)
+            # both graph flavours are cheap relative to the local step, so
+            # the data-dependent choice is a select, not a cond: random
+            # topologies draw from the SAME k_top a serial run would use
+            adj = jnp.where(
+                resample > 0,
+                random_adjacency(k_top, n, min(cfg.comm_batch, n - 1)),
+                adj_static,
+            )
         mix = mixing_matrix(adj, active, cfg.comm_batch)
 
         premix = state.params
@@ -434,6 +553,7 @@ class GluADFL:
         counts,
         val_x=None,
         val_y=None,
+        scenario=None,
         *,
         batch_size: int,
         chunk: int,
@@ -442,11 +562,44 @@ class GluADFL:
     ):
         def body(st, _):
             return self._round(
-                st, x, y, counts, val_x, val_y,
+                st, x, y, counts, val_x, val_y, scenario,
                 batch_size=batch_size, eval_every=eval_every, eval_fn=eval_fn,
             )
 
         return jax.lax.scan(body, state, None, length=chunk)
+
+    def _sweep_chunk(
+        self,
+        states: FLState,
+        adjacency,
+        resample,
+        inactive_ratio,
+        x,
+        y,
+        counts,
+        val_x=None,
+        val_y=None,
+        *,
+        batch_size: int,
+        chunk: int,
+        eval_every: int = 0,
+        eval_fn: Callable | None = None,
+    ):
+        """``chunk`` rounds of EVERY scenario as one vmapped scan: the
+        grid axis G batches the whole ``_train_chunk`` program (states,
+        adjacencies, resample flags and inactive ratios all carry a
+        leading G), while the federation data/validation set broadcast
+        unbatched.  Returns ``(states, losses (G, chunk))`` — plus a
+        metrics dict of ``(G, chunk)`` records when eval is armed."""
+
+        def one(state, adj, rs, ratio):
+            return self._train_chunk(
+                state, x, y, counts, val_x, val_y, (adj, rs, ratio),
+                batch_size=batch_size, chunk=chunk,
+                eval_every=eval_every, eval_fn=eval_fn,
+            )
+
+        return jax.vmap(one)(states, adjacency, resample, inactive_ratio)
 
     def train_chunk(
         self,
@@ -628,6 +781,115 @@ class GluADFL:
                 history.append({"round": t, "loss": float(loss)})
                 t += 1
         return self.population(state), history, state
+
+    # ------------------------------------------------------------------
+    def train_sweep(
+        self,
+        x,
+        y,
+        counts,
+        *,
+        grid: SweepGrid,
+        batch_size: int = 64,
+        rounds: int | None = None,
+        chunk: int | None = None,
+        eval_every: int = 0,
+        eval_fn: Callable | None = None,
+        val_data: tuple | None = None,
+    ):
+        """Train EVERY scenario of ``grid`` as one batched device
+        program; returns ``(populations, histories, states)``.
+
+        This is the scenario-sweep engine: the per-round body is vmapped
+        over the grid axis G — topologies enter as stacked per-scenario
+        adjacency matrices (+ a resample flag for per-round random
+        graphs), inactive ratios and seeds as plain ``(G,)``/``(G, 2)``
+        arrays — so the whole Fig-4/Fig-5 grid compiles ONCE per chunk
+        shape and executes as a single XLA program instead of G serial
+        ``train()`` runs.  What is vmapped vs scan-carried:
+
+          * vmapped (leading G): FLState leaves, adjacency, resample,
+            inactive ratio, every per-round loss/eval record;
+          * scan-carried (inside each scenario): the round counter, RNG
+            key chain, staleness — exactly as in :meth:`train_chunk`;
+          * broadcast (no G axis): the federation data ``x/y/counts``
+            and the pre-batched validation set.
+
+        Scenario ``g`` consumes the IDENTICAL key stream as a serial
+        ``train(PRNGKey(seed_g), ...)`` run of the same config — the
+        parity test pins this — so the sweep is a pure re-batching, not
+        a re-definition, of the experiment.
+
+        Returns:
+          * ``populations`` — population params stacked ``(G, ...)``
+            (index one out with ``utils.pytree.tree_index``);
+          * ``histories`` — list of G per-scenario history lists, each
+            record-compatible with :meth:`train` (eval keys merged into
+            boundary rounds);
+          * ``states`` — final ``FLState`` stacked ``(G, ...)``.
+
+        Single-process only, and only the vmap-safe reference mixer: the
+        sharded mixer's shard_map collectives and the Pallas kernel are
+        per-scenario programs, not batchable ones (run those through
+        serial :meth:`train`).
+        """
+        if jax.process_count() > 1:
+            raise NotImplementedError(
+                "train_sweep batches scenarios on ONE process; multi-host "
+                "runs sweep via serial train() per scenario"
+            )
+        if self.mixer != "tree":
+            raise NotImplementedError(
+                f"train_sweep vmaps the reference tree mixer; "
+                f"mixer={self.mixer!r} (shard_map / Pallas) is a "
+                f"per-scenario program — use serial train() for it"
+            )
+        n = self.cfg.num_nodes
+        if grid.adjacency.shape[-1] != n:
+            raise ValueError(
+                f"grid built for N={grid.adjacency.shape[-1]} nodes but "
+                f"cfg.num_nodes={n}"
+            )
+        rounds = rounds if rounds is not None else self.cfg.rounds
+        x, y = jnp.asarray(x), jnp.asarray(y)
+        counts = jnp.asarray(counts)
+        val_x = val_y = None
+        if val_data is not None:
+            val_x, val_y = (jnp.asarray(v) for v in val_data)
+        do_eval = bool(eval_every) and (eval_fn is not None or val_data is not None)
+        resolved = self._resolve_eval_fn(eval_fn) if do_eval else None
+
+        states = self._sweep_init_jit(grid.init_keys)
+        g_count = grid.size
+        histories: list[list[dict]] = [[] for _ in range(g_count)]
+        chunk = max(1, min(chunk or DEFAULT_CHUNK, rounds))
+        full, rem = divmod(rounds, chunk)
+        t = 0
+        for c in [chunk] * full + ([rem] if rem else []):
+            states, aux = self._sweep_chunk_jit(
+                states, grid.adjacency, grid.resample, grid.inactive_ratio,
+                x, y, counts, val_x, val_y,
+                batch_size=batch_size, chunk=c,
+                eval_every=eval_every if do_eval else 0,
+                eval_fn=resolved,
+            )
+            # ONE host sync per chunk for the WHOLE grid
+            if do_eval:
+                losses, metrics = aux
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+            else:
+                losses, metrics = aux, {}
+            losses = np.asarray(losses)  # (G, c)
+            for g in range(g_count):
+                for i in range(c):
+                    rec = {"round": t + i, "loss": float(losses[g, i])}
+                    if do_eval and (t + i + 1) % eval_every == 0:
+                        rec.update(
+                            {k: float(v[g, i]) for k, v in metrics.items()}
+                        )
+                    histories[g].append(rec)
+            t += c
+        return self._sweep_pop_jit(states.params), histories, states
 
     # ------------------------------------------------------------------
     @staticmethod

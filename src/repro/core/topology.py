@@ -122,6 +122,48 @@ def mixing_matrix(
     return act[:, None] * mix_active + (1 - act)[:, None] * eye
 
 
+def stacked_adjacency(
+    topologies, n: int, cluster_size: int = 4
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched adjacency builder for the sweep engine.
+
+    Returns ``(adjacency, resample)`` with ``adjacency`` shaped
+    ``(G, N, N)`` — one static adjacency per scenario — and ``resample``
+    shaped ``(G,)`` in {0, 1}: scenarios whose topology re-draws its
+    graph every round (``"random"``) get ``resample == 1`` and a zero
+    adjacency placeholder; the round body then substitutes a fresh
+    :func:`random_adjacency` draw from that round's key, so batched
+    scenarios consume the identical key stream as a serial run of the
+    same topology.
+    """
+    adjs, flags = [], []
+    for topo in topologies:
+        static = static_adjacency(topo, n, cluster_size)
+        if static is None:  # "random": sampled per round from the key
+            adjs.append(jnp.zeros((n, n), jnp.float32))
+            flags.append(1.0)
+        else:
+            adjs.append(static)
+            flags.append(0.0)
+    return jnp.stack(adjs), jnp.asarray(flags, jnp.float32)
+
+
+def mixing_matrix_stacked(
+    adjacency: jnp.ndarray, active: jnp.ndarray, comm_batch: int
+) -> jnp.ndarray:
+    """Batched :func:`mixing_matrix`: ``(G, N, N)`` adjacencies and
+    ``(G, N)`` active masks in, ``(G, N, N)`` row-stochastic mixing
+    matrices out — one vmap, scenario ``g`` bitwise-identical to
+    ``mixing_matrix(adjacency[g], active[g], comm_batch)``.
+
+    Standalone grid-level builder (spectral-gap sweeps, schedule
+    analyses); ``GluADFL.train_sweep`` itself batches plain
+    ``mixing_matrix`` under its own vmap of the round body."""
+    return jax.vmap(mixing_matrix, in_axes=(0, 0, None))(
+        adjacency, active, comm_batch
+    )
+
+
 def spectral_gap(mix: jnp.ndarray) -> float:
     """1 - |lambda_2| of a (symmetric-ish) mixing matrix — the standard
     gossip convergence-rate proxy, reported by the topology benchmark."""

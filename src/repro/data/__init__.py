@@ -1,3 +1,8 @@
+"""CGM data layer: synthetic twins of the paper's four datasets
+(OhioT1DM / ABC4D / CTR3 / REPLACE-BG), sliding-window featurization
+(L=12 history -> H=6 horizon), per-patient normalization, and the
+federated loader that stacks patients into padded ``(N, m, L)`` node
+arrays (``load_federated_dataset``)."""
 from repro.data.synth import DATASET_SPECS, generate_patient_series, generate_dataset
 from repro.data.windowing import make_windows, split_by_time, zscore_stats, normalize
 from repro.data.pipeline import PatientData, FederatedData, load_federated_dataset, batch_iterator

@@ -1,8 +1,8 @@
-# Pallas TPU kernels for the perf-critical compute layers:
-#   gossip_mix    — the paper's gossip parameter-mixing contraction
-#   lstm_cell     — fused LSTM cell (the per-node model's hot loop)
-#   swa_attention — banded sliding-window flash attention (long-context
-#                   shapes of the assigned Mistral-family/hybrid archs)
-# Each kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py oracle,
-# ops.py jit'd wrapper (padding + CPU-interpret/TPU dispatch).
+"""Pallas TPU kernels for the perf-critical compute layers:
+  gossip_mix    — the paper's gossip parameter-mixing contraction
+  lstm_cell     — fused LSTM cell (the per-node model's hot loop)
+  swa_attention — banded sliding-window flash attention (long-context
+                  shapes of the assigned Mistral-family/hybrid archs)
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py oracle,
+ops.py jit'd wrapper (padding + CPU-interpret/TPU dispatch)."""
 from repro.kernels.ops import gossip_mix, gossip_mix_dp, lstm_cell, swa_attention

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture x input shape)
 on the production meshes, proving the distribution config is coherent
 without hardware (DESIGN.md §6).
@@ -26,6 +23,11 @@ the memory-fit proof and the collective schedule.
 
 Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 """
+import os
+
+# must precede the first jax import: the dry-run fakes a 512-chip pod
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 import re

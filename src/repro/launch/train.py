@@ -28,6 +28,19 @@ runs every configuration, including streaming eval:
                            fallback (host callback eval, pdb between
                            rounds).  Never selected automatically.
 
+Scenario sweeps (``--sweep-ratios`` / ``--sweep-seeds``)
+--------------------------------------------------------
+``--sweep-ratios 0,0.3,0.7 --sweep-seeds 3`` trains the whole
+(ratio x seed) grid of the chosen topology as ONE batched device
+program (``GluADFL.train_sweep``): per-scenario inactive ratios and
+seed keys are vmapped over the compiled chunk scan, so the grid costs
+one compile per chunk shape instead of G serial runs.  Streaming eval
+(``--eval-every``) stays in-scan and returns a (grid, chunk) record
+stack.  Sweeps are single-process and use the reference tree mixer
+(``--mixer sharded``/``kernel`` and multi-host flags refuse); instead
+of a checkpoint, the launcher writes a per-scenario summary JSON to
+``--out``.
+
 Gossip impl (``--mixer sharded`` only)
 --------------------------------------
   * ``--gossip-impl allgather`` (default) — gather the federation's node
@@ -87,6 +100,17 @@ from repro.optim import get_optimizer
 from repro.utils.pytree import tree_to_vector, vector_to_tree
 
 
+def _patient_predictions(model, pop, fed):
+    """Yield ``(patient, mg/dL predictions)`` of a population model over
+    each patient's test split — shared by the single-run and sweep
+    summaries."""
+    for p in fed.patients:
+        pred = np.asarray(
+            model.apply(pop, jnp.asarray(p.test_x))
+        ) * fed.sd + fed.mean
+        yield p, pred
+
+
 def save_checkpoint(path: Path, params) -> None:
     vec = np.asarray(tree_to_vector(params))
     leaves, treedef = jax.tree.flatten(params)
@@ -124,6 +148,14 @@ def main():
                     help="scan (default; the production path, incl. "
                          "streaming eval) or loop (per-round debug "
                          "fallback; also selected by --chunk 0)")
+    ap.add_argument("--sweep-ratios", default=None,
+                    help="comma-separated inactive ratios, e.g. "
+                         "'0,0.3,0.7': train the whole (ratio x seed) "
+                         "grid of --topology as ONE batched program "
+                         "(GluADFL.train_sweep) instead of a single run")
+    ap.add_argument("--sweep-seeds", type=int, default=1,
+                    help="seeds per sweep scenario (0..K-1); only with "
+                         "--sweep-ratios")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="compute population val-RMSE every K rounds "
                          "INSIDE the scanned chunk (0 = off); no "
@@ -154,6 +186,22 @@ def main():
     distributed = multihost.initialize(
         args.coordinator, args.num_processes, args.process_id
     )
+    sweep_ratios = None
+    if args.sweep_ratios is not None:
+        sweep_ratios = [float(r) for r in args.sweep_ratios.split(",") if r]
+        if not sweep_ratios:
+            raise SystemExit("--sweep-ratios parsed to an empty list")
+        if args.sweep_seeds < 1:
+            raise SystemExit("--sweep-seeds must be >= 1")
+        if distributed:
+            raise SystemExit("scenario sweeps are single-process "
+                             "(drop --num-processes or --sweep-ratios)")
+        if args.mixer not in (None, "tree") or args.use_kernel:
+            raise SystemExit("scenario sweeps vmap the reference tree "
+                             "mixer (drop --mixer/--use-kernel)")
+        if args.engine == "loop" or args.chunk == 0:
+            raise SystemExit("scenario sweeps need the scan engine "
+                             "(drop --engine loop / --chunk 0)")
     if distributed:
         print(f"multihost: process {jax.process_index()}/{jax.process_count()} "
               f"local_devices={jax.local_device_count()} "
@@ -204,6 +252,47 @@ def main():
         print(f"streaming eval: every {args.eval_every} rounds on "
               f"{len(val_x)} val windows (in-scan)")
 
+    if sweep_ratios is not None:
+        from repro.core import SweepGrid
+        from repro.utils.pytree import tree_index
+
+        grid = SweepGrid.build(
+            [args.topology], sweep_ratios, range(args.sweep_seeds),
+            num_nodes=fed.num_nodes, cluster_size=fl_cfg.cluster_size,
+        )
+        print(f"sweep: {grid.size} scenarios "
+              f"({args.topology} x {sweep_ratios} x {args.sweep_seeds} seeds) "
+              f"as one batched program")
+        pops, hists, _ = trainer.train_sweep(
+            fed.x, fed.y, fed.counts, grid=grid,
+            batch_size=cfg.train.batch_size, chunk=args.chunk or None,
+            eval_every=args.eval_every, val_data=val_data,
+        )
+        summary = []
+        for g, (topo, ratio, seed) in enumerate(grid.labels):
+            hist = hists[g]
+            pop_g = tree_index(pops, g)
+            preds, ys = [], []
+            for p, pred in _patient_predictions(model, pop_g, fed):
+                preds.append(pred)
+                ys.append(p.test_y_raw)
+            agg = all_metrics(np.concatenate(ys), np.concatenate(preds))
+            rec = {"topology": topo, "inactive_ratio": ratio, "seed": seed,
+                   "final_loss": hist[-1]["loss"], **agg}
+            evals = [h["val_rmse"] for h in hist if "val_rmse" in h]
+            if evals:
+                rec["final_val_rmse"] = evals[-1]
+            summary.append(rec)
+            print(f"  [{topo:8s} inactive={ratio:.0%} seed={seed}] "
+                  f"loss {rec['final_loss']:.4f}  test RMSE {agg['rmse']:6.2f}  "
+                  f"MARD {agg['mard']:5.2f}%")
+        out = Path(args.out)
+        out.mkdir(parents=True, exist_ok=True)
+        sweep_path = out / f"sweep_{args.dataset}_{args.topology}.json"
+        sweep_path.write_text(json.dumps(summary, indent=2))
+        print(f"sweep summary -> {sweep_path}")
+        return
+
     pop, hist, state = trainer.train(
         jax.random.PRNGKey(cfg.fl.seed), fed.x, fed.y, fed.counts,
         batch_size=cfg.train.batch_size,
@@ -227,8 +316,7 @@ def main():
     if multihost.is_primary():
         # per-patient + aggregate clinical metrics
         preds, ys = [], []
-        for i, p in enumerate(fed.patients):
-            pred = np.asarray(model.apply(pop, jnp.asarray(p.test_x))) * fed.sd + fed.mean
+        for i, (p, pred) in enumerate(_patient_predictions(model, pop, fed)):
             m = all_metrics(p.test_y_raw, pred)
             print(f"  patient {i:3d}: RMSE {m['rmse']:6.2f}  MARD {m['mard']:5.2f}%  "
                   f"gRMSE {m['grmse']:6.2f}  lag {m['time_lag']:4.1f}min")

@@ -1,3 +1,6 @@
+"""Clinical blood-glucose prediction metrics (paper §4): RMSE, MARD,
+MAE, glucose-specific RMSE (Clarke-grid-weighted) and time-lag —
+``all_metrics`` bundles them for every table/figure."""
 from repro.metrics.glucose import (
     rmse,
     mard,

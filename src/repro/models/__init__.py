@@ -1,3 +1,7 @@
+"""Per-node forecasting models: the paper's LSTM plus the baseline pool
+it is compared against (linear regression, N-BEATS, N-HiTS, gradient-
+boosted trees).  All share the ``Model`` protocol (``init``/``apply``
+on stacked params) so the FL engines can vmap them over the federation."""
 from repro.models.lstm import LSTMModel
 from repro.models.linear import LinearModel
 from repro.models.nbeats import NBeatsModel

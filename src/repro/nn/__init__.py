@@ -1,3 +1,6 @@
+"""Neural-net building blocks for the assigned architecture pool:
+norms/dense/embeddings/RoPE, GQA attention with KV cache, MoE FFN,
+Mamba-2 SSD, RG-LRU, and sequence unrolling helpers."""
 from repro.nn.layers import rms_norm, layer_norm, dense, embed, rope, pad_vocab
 from repro.nn.attention import gqa_attention, decode_attention, KVCache
 from repro.nn.moe import moe_ffn

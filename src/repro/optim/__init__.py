@@ -1,2 +1,5 @@
+"""Minimal pure-pytree optimizers (SGD / Adam / AdamW) and LR schedules;
+``Optimizer.init``/``update`` state threads through the FL engines'
+vmapped local steps."""
 from repro.optim.optimizers import Optimizer, sgd, adam, adamw, get_optimizer
 from repro.optim.schedules import constant, cosine_decay, warmup_cosine

@@ -1,3 +1,6 @@
+"""Small shared utilities: pytree algebra (stack/index/mean/mix — the
+federation's stacked-leaf operations), RNG helpers, and version-compat
+shims (``utils.compat.shard_map``)."""
 from repro.utils.pytree import (
     tree_vector_size,
     tree_to_vector,

@@ -1,0 +1,78 @@
+"""Doc lint: every module under ``src/repro/`` must open with a module
+docstring (package ``__init__.py`` files included — they are the layer
+map a reader meets first).
+
+    python tools/check_docstrings.py [--root src/repro] [--junit PATH]
+
+Exit 0 when clean; exit 1 listing every bare module.  ``--junit`` also
+writes a one-suite junit XML (one testcase per module) so CI can upload
+the result like the test jobs do.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from xml.sax.saxutils import escape
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def bare_modules(root: Path) -> tuple[list[Path], list[Path]]:
+    """Returns ``(checked, bare)`` module paths under ``root``."""
+    checked, bare = [], []
+    for path in sorted(root.rglob("*.py")):
+        checked.append(path)
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError as e:  # a broken module is also a failure
+            print(f"SYNTAX ERROR: {path}: {e}", file=sys.stderr)
+            bare.append(path)
+            continue
+        if ast.get_docstring(tree) is None:
+            bare.append(path)
+    return checked, bare
+
+
+def write_junit(path: Path, checked: list[Path], bare: list[Path]) -> None:
+    bare_set = set(bare)
+    cases = []
+    for mod in checked:
+        name = escape(str(mod))
+        if mod in bare_set:
+            cases.append(
+                f'<testcase name="{name}">'
+                f'<failure message="missing module docstring"/></testcase>'
+            )
+        else:
+            cases.append(f'<testcase name="{name}"/>')
+    path.write_text(
+        '<?xml version="1.0" encoding="utf-8"?>\n'
+        f'<testsuite name="check_docstrings" tests="{len(checked)}" '
+        f'failures="{len(bare)}">{"".join(cases)}</testsuite>\n'
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(ROOT / "src" / "repro"))
+    ap.add_argument("--junit", default=None,
+                    help="also write a junit XML report here")
+    args = ap.parse_args(argv)
+
+    checked, bare = bare_modules(Path(args.root))
+    if args.junit:
+        write_junit(Path(args.junit), checked, bare)
+    if bare:
+        print(f"{len(bare)}/{len(checked)} modules missing a module "
+              f"docstring:", file=sys.stderr)
+        for mod in bare:
+            print(f"  {mod}", file=sys.stderr)
+        return 1
+    print(f"docstring lint: {len(checked)} modules clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
