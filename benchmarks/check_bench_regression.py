@@ -56,8 +56,11 @@ DEFAULT_SWEEP_FLOOR = 2.0
 # wall-clock rows (compile time included by design) — their ratio to the
 # steady-state loop row is NOT machine-portable (a faster-executing
 # runner inflates loop rps without touching compile-bound rows), so they
-# are gated ONLY by the same-run sweep_scan_speedup_vs_serial floor
-WALL_CLOCK_ROWS = ("serial-sweep", "sweep-scan")
+# are excluded from the loop-ratio rule and gated by the same-run
+# sweep_scan_speedup_vs_serial floor plus a presence check (a baseline
+# wall-clock row silently vanishing from the fresh run must fail —
+# that is how a benched engine path quietly stops being measured)
+WALL_CLOCK_ROWS = ("serial-sweep", "sweep-scan", "sweep-sharded-psum")
 
 
 def _ratios(report: dict) -> dict[str, float]:
@@ -95,6 +98,17 @@ def main(argv=None) -> int:
 
     base = json.loads(Path(args.baseline).read_text())
     failures: list[str] = []
+
+    # wall-clock rows skip the ratio rule but must not silently vanish
+    for row in WALL_CLOCK_ROWS:
+        if row in base.get("rounds_per_sec", {}):
+            present = row in fresh.get("rounds_per_sec", {})
+            print(f"{row:>20s}: wall-clock row "
+                  f"{'present' if present else 'MISSING'} "
+                  f"{'ok' if present else 'FAIL'}")
+            if not present:
+                failures.append(f"wall-clock row {row!r} present in the "
+                                f"baseline but missing from the fresh run")
 
     base_r, fresh_r = _ratios(base), _ratios(fresh)
     for engine, b in sorted(base_r.items()):

@@ -34,6 +34,17 @@ path under its execution strategies.
                     whole grid.  The claim under test: >= 2x the serial
                     sweep's wall clock at bench scale
                     (``sweep_scan_speedup_vs_serial`` in the JSON);
+  * sweep-sharded-psum — the same Fig-5 grid as ONE program on the 2-D
+                    ("grid", "node") sweep mesh (``launch.mesh.
+                    make_sweep_mesh``): scenarios batch over the grid
+                    axis while the psum gossip collectives stay scoped
+                    to the node axis — the memory-scaled sweep schedule
+                    (per-device state O(G/grid · N/node · D)).  Like the
+                    other sweep rows this is END-TO-END wall clock,
+                    compile included, and on CPU it prices collective
+                    overhead rather than a speedup — the row exists so
+                    the schedule's cost stays measured and its presence
+                    gated;
   * multihost-psum-scan — OPTIONAL (``--processes P``, P >= 2): the same
                     psum schedule but with the node axis spanning P REAL
                     ``jax.distributed`` processes over localhost TCP
@@ -194,6 +205,34 @@ def bench_sweep(make_trainer, x, y, counts, *, nodes: int, rounds: int,
         run_sweep()
         sweep_best = max(sweep_best, g * rounds / (time.perf_counter() - t0))
     return serial_best, sweep_best
+
+
+def bench_sweep_sharded(make_trainer, x, y, counts, *, nodes: int, rounds: int,
+                        batch_size: int, chunk: int, reps: int = 3) -> float:
+    """End-to-end wall clock of the same Fig-5 grid on the 2-D
+    (grid, node) sweep mesh with the memory-scaled psum schedule —
+    scenario-rounds/sec, compile included (same measurement contract as
+    :func:`bench_sweep`: the grid runs exactly once in the real
+    workload).  On CPU the collectives cost more than the batched
+    einsum they replace; what this row buys is per-device memory
+    O(G/grid · N/node · D) — the committed number prices that trade."""
+    import jax
+
+    from repro.core import SweepGrid
+
+    grid = SweepGrid.build(SWEEP_TOPOLOGIES, SWEEP_RATIOS, (0,), num_nodes=nodes)
+
+    def run():
+        tr = make_trainer("sharded", "psum")
+        tr.train_sweep(x, y, counts, grid=grid, batch_size=batch_size,
+                       rounds=rounds, chunk=chunk)
+
+    best = 0.0
+    for _ in range(reps):  # fresh trainer each rep -> the compile recurs
+        t0 = time.perf_counter()
+        run()
+        best = max(best, grid.size * rounds / (time.perf_counter() - t0))
+    return best
 
 
 def _bench_multihost_worker(args) -> None:
@@ -376,6 +415,10 @@ def main(argv=None):
     )
     results["serial-sweep"] = serial_rps
     results["sweep-scan"] = sweep_rps
+    results["sweep-sharded-psum"] = bench_sweep_sharded(
+        make, x, y, counts, nodes=args.nodes, rounds=args.rounds,
+        batch_size=args.batch, chunk=args.chunk,
+    )
 
     if args.processes and args.processes >= 2:
         results["multihost-psum-scan"] = _bench_multihost(args)

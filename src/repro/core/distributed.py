@@ -28,6 +28,17 @@ At fleet scale the federation axis N is sharded over the mesh's node axis
 All paths are ``shard_map``s so the collective schedule is explicit and
 the dry-run can count its bytes.
 
+Sweep batching: every shard body below is written dim-relative (ellipsis
+einsums, gather/scatter on the second-to-last axis), so the SAME bodies
+run under a 2-D ``("grid", "node")`` sweep mesh
+(``launch.mesh.make_sweep_mesh``): the grid axis BATCHES — each shard
+holds a ``(G/grid, N/node, D)`` block and no collective ever crosses
+``"grid"`` — while the node axis keeps carrying the gossip collectives.
+:func:`sharded_gossip_mix` accepts grid-stacked ``(G, N, ...)`` inputs
+and issues one shard_map with ``P("grid", ...)`` in_specs; the trainer's
+swept-sharded path reaches the identical lowering through
+``jax.vmap(..., spmd_axis_name="grid")`` over the per-scenario call.
+
 Multi-host: every shard body above indexes the node axis GLOBALLY — the
 mixing-matrix row/column blocks are sliced by shard position on the mesh,
 not by process — so the same programs lower unchanged when the federation
@@ -58,19 +69,34 @@ GOSSIP_IMPLS = ("allgather", "psum")
 def ring_gossip_shard(w, active, *, axis: str, n_shards: int, self_w: float = 1.0 / 3.0):
     """shard_map body: ring mix via two collective-permutes.
 
-    ``w``: local block of stacked params, leading dim = nodes-per-shard
-    (1 when fully sharded).  ``active``: per-shard (1,) activity flag
-    block.  Inactive nodes keep their row; active nodes average self with
-    *active* ring neighbours.  ``n_shards`` is static (the ppermute
-    source/target lists need a Python int — the caller reads it off the
-    mesh).
+    ``w``: local block of stacked params, node dim second-to-last with
+    ``k = nodes-per-shard`` CONSECUTIVE global rows (1 when fully
+    sharded; a leading grid-block dim batches through).  ``active``: the
+    matching (..., k, 1) activity-flag block.  Inactive nodes keep their
+    row; active nodes average self with *active* ring neighbours.
+    ``n_shards`` is static (the ppermute source/target lists need a
+    Python int — the caller reads it off the mesh).
+
+    When ``k > 1`` a row's ring neighbours ``i±1`` mostly live INSIDE
+    the same block — only the block-boundary rows talk to the adjacent
+    shards.  The shifted views are therefore built by an intra-block
+    roll stitched to a single-row boundary exchange (``k``'s worth of
+    ppermute traffic would be wrong AND wasteful: permuting whole blocks
+    would hand row ``i`` the params of row ``i±k``).
     """
     fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
     bwd = [((i + 1) % n_shards, i) for i in range(n_shards)]
-    w_prev = jax.lax.ppermute(w, axis, fwd)
-    w_next = jax.lax.ppermute(w, axis, bwd)
-    a_prev = jax.lax.ppermute(active, axis, fwd)
-    a_next = jax.lax.ppermute(active, axis, bwd)
+
+    def ring_shift(v):
+        """(v_prev, v_next): row i's view of global rows i-1 and i+1."""
+        prev_last = jax.lax.ppermute(v[..., -1:, :], axis, fwd)
+        next_first = jax.lax.ppermute(v[..., :1, :], axis, bwd)
+        v_prev = jnp.concatenate([prev_last, v[..., :-1, :]], axis=-2)
+        v_next = jnp.concatenate([v[..., 1:, :], next_first], axis=-2)
+        return v_prev, v_next
+
+    w_prev, w_next = ring_shift(w)
+    a_prev, a_next = ring_shift(active)
     num = w + a_prev * w_prev + a_next * w_next
     den = 1.0 + a_prev + a_next
     mixed = num / den
@@ -78,26 +104,34 @@ def ring_gossip_shard(w, active, *, axis: str, n_shards: int, self_w: float = 1.
 
 
 def general_gossip_shard(w, mix_rows, *, axis: str):
-    """shard_map body: general mix. ``mix_rows`` is this shard's rows of
-    the (N, N) mixing matrix; the node axis of ``w`` is all-gathered and
-    contracted against them."""
-    w_all = jax.lax.all_gather(w, axis, tiled=True)  # (N, D_local)
-    return jnp.einsum("km,md->kd", mix_rows, w_all.astype(jnp.float32)).astype(w.dtype)
+    """shard_map body: general mix. ``mix_rows`` is this shard's
+    (..., N/s, N) rows of the mixing matrix; the node axis of ``w`` is
+    all-gathered and contracted against them.  The gather yields
+    (..., N, D) with D FULL — the in_specs shard only the node axis, so
+    the trailing parameter dim is never split.  Leading dims (the sweep
+    mesh's local grid block) batch straight through the ellipsis."""
+    w_all = jax.lax.all_gather(w, axis, tiled=True, axis=w.ndim - 2)
+    return jnp.einsum(
+        "...km,...md->...kd", mix_rows, w_all.astype(jnp.float32)
+    ).astype(w.dtype)
 
 
 def psum_gossip_shard(w, mix_cols, *, axis: str):
     """shard_map body: memory-scaled general mix.  ``mix_cols`` is this
-    shard's (N, N/s) COLUMN block of the mixing matrix; ``w`` its local
-    (N/s, D) rows.  The shard's contribution to EVERY output row is one
-    local matmul, and the partial products are combined with a
-    reduce-scatter that leaves each shard holding only its own rows —
-    the node axis is never gathered on any device.
+    shard's (..., N, N/s) COLUMN block of the mixing matrix; ``w`` its
+    local (..., N/s, D) rows.  The shard's contribution to EVERY output
+    row is one local matmul, and the partial products are combined with
+    a reduce-scatter that leaves each shard holding only its own rows —
+    the node axis is never gathered on any device.  Leading dims (the
+    sweep mesh's local grid block) batch straight through.
 
     fp32 accumulation matches ``general_gossip_shard`` so the two impls
     agree to float tolerance on the same mixing matrix.
     """
-    contrib = jnp.einsum("nm,md->nd", mix_cols, w.astype(jnp.float32))
-    out = jax.lax.psum_scatter(contrib, axis, scatter_dimension=0, tiled=True)
+    contrib = jnp.einsum("...nm,...md->...nd", mix_cols, w.astype(jnp.float32))
+    out = jax.lax.psum_scatter(
+        contrib, axis, scatter_dimension=contrib.ndim - 2, tiled=True
+    )
     return out.astype(w.dtype)
 
 
@@ -157,6 +191,7 @@ def sharded_gossip_mix(
     *,
     mesh: Mesh | None = None,
     node_axes: tuple[str, ...] | None = None,
+    grid_axis: str | None = None,
     impl: str = "allgather",
 ) -> PyTree:
     """Device-parallel gossip mix — drop-in peer of ``gossip_mix_tree`` /
@@ -176,6 +211,17 @@ def sharded_gossip_mix(
     With no ``mesh`` a cached 1-axis ``("node",)`` mesh over the largest
     device count dividing N is used (``launch.mesh.make_federation_mesh``).
 
+    Grid batching (the sweep engine's second engine): pass grid-stacked
+    leaves ``(G, N, ...)``, per-scenario mixing matrices ``(G, N, N)``
+    (+ ``(G, N)`` active masks) and a 2-D ``("grid", "node")`` mesh from
+    ``launch.mesh.make_sweep_mesh`` — auto-detected when the mesh has a
+    ``"grid"`` axis and ``mix`` is 3-D, or forced via ``grid_axis=``.
+    The single shard_map then carries ``P("grid", ...)`` in_specs: the
+    grid axis purely BATCHES (no collective ever crosses it) while the
+    node-axis collectives run per scenario block.  Scenario/state shape
+    mismatches fail here at trace time (leading-dim assertion below)
+    instead of inside the collective.
+
     Jit/scan friendly: mesh resolution happens at trace time, so the
     whole FL round — including this collective — compiles into one
     program (the trainer's ``mixer="sharded"`` path).
@@ -184,29 +230,48 @@ def sharded_gossip_mix(
         raise ValueError(f"impl {impl!r} not in {GOSSIP_IMPLS}")
     if mesh is None:
         mesh = _default_federation_mesh(mix.shape[0])
-    axes = node_axes or tuple(a for a in mesh.axis_names if a != "model")
+    axes = node_axes or tuple(
+        a for a in mesh.axis_names if a not in ("model", "grid")
+    )
     axis = axes if len(axes) > 1 else axes[0]
+    if grid_axis is None and mix.ndim == 3 and "grid" in mesh.axis_names:
+        grid_axis = "grid"
+    g = (grid_axis,) if grid_axis else ()
+    lead = 1 + len(g)  # stacked leading dims: [grid,] node
+    if mix.ndim != 1 + lead:
+        raise ValueError(
+            f"mixing matrix must be {1 + lead}-D "
+            f"({'(G, N, N)' if g else '(N, N)'}) for grid_axis={grid_axis!r}, "
+            f"got shape {mix.shape}"
+        )
 
     def leaf(l):
-        flat = l.reshape(l.shape[0], -1)
+        flat = l.reshape(l.shape[:lead] + (-1,))
+        if flat.shape[0] != mix.shape[0]:
+            # fail at TRACE time with the shapes in hand — a mismatched
+            # scenario grid inside the collective is far harder to read
+            raise ValueError(
+                f"stacked leading dim {flat.shape[0]} != mixing-matrix "
+                f"leading dim {mix.shape[0]} (leaf {l.shape}, mix {mix.shape})"
+            )
         if impl == "psum":
             out = _shard_map(
                 partial(psum_gossip_shard, axis=axis),
                 mesh=mesh,
-                in_specs=(P(axes), P(None, axes)),  # rows | COLUMN block
-                out_specs=P(axes),
+                in_specs=(P(*g, axes), P(*g, None, axes)),  # rows | COLUMN block
+                out_specs=P(*g, axes),
             )(flat, mix)
         else:
             out = _shard_map(
                 partial(general_gossip_shard, axis=axis),
                 mesh=mesh,
-                in_specs=(P(axes), P(axes)),
-                out_specs=P(axes),
+                in_specs=(P(*g, axes), P(*g, axes, None)),  # rows | ROW block
+                out_specs=P(*g, axes),
             )(flat, mix)
         if active is not None:
             # jnp.where, not arithmetic blending: inactive rows stay
             # bit-exact even if the gathered params carry NaN/Inf
-            a = (active > 0).reshape((-1,) + (1,) * (flat.ndim - 1))
+            a = (active > 0).reshape(active.shape + (1,) * (flat.ndim - active.ndim))
             out = jnp.where(a, out, flat.astype(out.dtype))
         return out.reshape(l.shape).astype(l.dtype)
 

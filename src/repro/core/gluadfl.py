@@ -75,6 +75,15 @@ consumes the identical key stream as ``train(PRNGKey(seed_g))`` under
 the same config — swept results ARE the serial results, just batched
 (``tests/test_sweep.py`` pins the parity; ``benchmarks/rounds_per_sec``
 prices the speedup as the ``sweep-scan`` row).
+
+The sweep has a second engine for fleet scale: with ``mixer="sharded"``
+the grid axis becomes a REAL mesh axis — the ``(G, N, ...)`` stacked
+state lives on a 2-D ``("grid", "node")`` mesh
+(``launch.mesh.make_sweep_mesh``), the vmap binds the scenario axis to
+``"grid"`` (``spmd_axis_name``), and the gossip collectives inside the
+round body stay scoped to ``"node"`` — so the memory-scaled psum
+schedule keeps per-device state at O(G/grid · N/node · D) across the
+whole grid (``sweep-sharded-psum`` bench row).
 """
 from __future__ import annotations
 
@@ -254,16 +263,17 @@ class GluADFL:
             lambda p, x, y: jnp.mean(jnp.square(model.apply(p, x) - y))
         )
         self._round_jit = jax.jit(
-            self._round, static_argnames=("batch_size", "eval_every", "eval_fn")
+            self._round,
+            static_argnames=("batch_size", "eval_every", "eval_fn", "mesh"),
         )
         self._chunk_jit = jax.jit(
             self._train_chunk,
-            static_argnames=("batch_size", "chunk", "eval_every", "eval_fn"),
+            static_argnames=("batch_size", "chunk", "eval_every", "eval_fn", "mesh"),
             donate_argnums=(0,),
         )
         self._sweep_chunk_jit = jax.jit(
             self._sweep_chunk,
-            static_argnames=("batch_size", "chunk", "eval_every", "eval_fn"),
+            static_argnames=("batch_size", "chunk", "eval_every", "eval_fn", "mesh"),
             donate_argnums=(0,),
         )
         self._sweep_init_jit = jax.jit(jax.vmap(self.init))
@@ -327,6 +337,55 @@ class GluADFL:
             replicate(mesh, np.asarray(key))
         )
 
+    def _sweep_state_shardings(self, mesh) -> FLState:
+        """NamedShardings for the ``(G, N, ...)`` grid-stacked ``FLState``
+        on a 2-D (grid, node) sweep mesh: node-stacked leaves split over
+        BOTH axes, per-scenario scalars (round counter, key chain,
+        non-node optimizer leaves) over the grid axis only.  Field-wise
+        like :meth:`state_shardings` — the ``(G, 2)`` key must never
+        trip the node heuristic when ``num_nodes == 2``."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        n = self.cfg.num_nodes
+        g_ax, n_ax = mesh.axis_names
+        gn = NamedSharding(mesh, P(g_ax, n_ax))
+        g_only = NamedSharding(mesh, P(g_ax))
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        stacked = lambda tree: jax.tree.map(
+            lambda s: gn if s.ndim >= 1 and s.shape[0] == n else g_only, tree
+        )
+        return FLState(
+            params=stacked(shapes.params),
+            opt_state=stacked(shapes.opt_state),
+            staleness=gn,
+            round=g_only,
+            key=g_only,
+        )
+
+    def _place_sweep_data(self, mesh, grid: SweepGrid, x, y, counts, val_x, val_y):
+        """Place the scenario grid + federation data for the swept-
+        sharded engine: per-scenario arrays split over the grid axis,
+        the (shared) federation data over the node axis, validation set
+        replicated — so no device ever materializes rows it doesn't
+        own before the compiled program even starts."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        g_ax, n_ax = mesh.axis_names
+        g_only = NamedSharding(mesh, P(g_ax))
+        node = NamedSharding(mesh, P(n_ax))
+        repl = NamedSharding(mesh, P())
+        grid = SweepGrid(
+            adjacency=jax.device_put(grid.adjacency, g_only),
+            resample=jax.device_put(grid.resample, g_only),
+            inactive_ratio=jax.device_put(grid.inactive_ratio, g_only),
+            init_keys=jax.device_put(grid.init_keys, g_only),
+            labels=grid.labels,
+        )
+        x, y, counts = (jax.device_put(v, node) for v in (x, y, counts))
+        if val_x is not None:
+            val_x, val_y = (jax.device_put(v, repl) for v in (val_x, val_y))
+        return grid, x, y, counts, val_x, val_y
+
     # ------------------------------------------------------------------
     def _sample_batch(self, key, x_node, y_node, count, batch_size):
         """Uniform with-replacement batch from one node's (padded) data."""
@@ -352,21 +411,23 @@ class GluADFL:
         return p, st, jnp.mean(losses)
 
     # ------------------------------------------------------------------
-    def _plain_mix(self, stacked: PyTree, mix: jnp.ndarray) -> PyTree:
+    def _plain_mix(self, stacked: PyTree, mix: jnp.ndarray, mesh=None) -> PyTree:
         """Mixer dispatch for the noise-free contraction (the mixing
-        matrix already carries identity rows for inactive nodes)."""
+        matrix already carries identity rows for inactive nodes).
+        ``mesh`` overrides ``self.mesh`` for the sharded mixer — the
+        swept-sharded path threads its 2-D (grid, node) mesh down here."""
         if self.mixer == "kernel":
             return gossip_mix_kernel(stacked, mix)
         if self.mixer == "sharded":
             return sharded_gossip_mix(
-                stacked, mix, mesh=self.mesh, impl=self.gossip_impl
+                stacked, mix, mesh=mesh or self.mesh, impl=self.gossip_impl
             )
         return gossip_mix_tree(stacked, mix)
 
-    def _gossip(self, premix: PyTree, mix: jnp.ndarray, active, k_dp) -> PyTree:
+    def _gossip(self, premix: PyTree, mix: jnp.ndarray, active, k_dp, mesh=None) -> PyTree:
         """Steps 2+3 (+ optional local-DP broadcast noise)."""
         if self.dp_noise_sigma <= 0.0:
-            return self._plain_mix(premix, mix)
+            return self._plain_mix(premix, mix, mesh)
         noise_keys = split_like(k_dp, premix)
         noise = jax.tree.map(
             lambda w, k_: self.dp_noise_sigma * jax.random.normal(k_, w.shape, w.dtype),
@@ -378,7 +439,7 @@ class GluADFL:
         # composed: neighbours mix the NOISED view; each node re-adds its
         # own clean self-contribution (it never needs to noise itself)
         shared = jax.tree.map(jnp.add, premix, noise)
-        mixed_noisy = self._plain_mix(shared, mix)
+        mixed_noisy = self._plain_mix(shared, mix, mesh)
         self_w = jnp.diagonal(mix)  # (N,)
         return jax.tree.map(
             lambda mn, z: mn - self_w.reshape((-1,) + (1,) * (z.ndim - 1)) * z,
@@ -464,6 +525,7 @@ class GluADFL:
         batch_size: int,
         eval_every: int = 0,
         eval_fn: Callable | None = None,
+        mesh=None,
     ):
         """One FL round as a pure ``FLState -> (FLState, aux)`` body —
         directly scannable (train_chunk) and jit-able (loop engine).
@@ -476,7 +538,12 @@ class GluADFL:
         triple overriding the config's topology/asynchrony — the sweep
         engine vmaps this body over a stacked grid of such triples.  The
         key stream is IDENTICAL either way (every round splits the same
-        four subkeys), so a swept scenario reproduces its serial twin."""
+        four subkeys), so a swept scenario reproduces its serial twin.
+
+        ``mesh`` (static) overrides the sharded mixer's mesh — the
+        swept-sharded path threads the 2-D (grid, node) sweep mesh down
+        to the gossip contraction; ``None`` keeps ``self.mesh`` /
+        the default federation mesh."""
         cfg = self.cfg
         n = cfg.num_nodes
         key, k_act, k_top, k_batch = jax.random.split(state.key, 4)
@@ -503,7 +570,7 @@ class GluADFL:
         k_dp = None
         if self.dp_noise_sigma > 0.0:
             key, k_dp = jax.random.split(key)
-        mixed = self._gossip(premix, mix, active, k_dp)
+        mixed = self._gossip(premix, mix, active, k_dp, mesh)
 
         node_keys = jax.random.split(k_batch, n)
         new_params, new_opt, losses = jax.vmap(
@@ -559,11 +626,13 @@ class GluADFL:
         chunk: int,
         eval_every: int = 0,
         eval_fn: Callable | None = None,
+        mesh=None,
     ):
         def body(st, _):
             return self._round(
                 st, x, y, counts, val_x, val_y, scenario,
                 batch_size=batch_size, eval_every=eval_every, eval_fn=eval_fn,
+                mesh=mesh,
             )
 
         return jax.lax.scan(body, state, None, length=chunk)
@@ -584,21 +653,35 @@ class GluADFL:
         chunk: int,
         eval_every: int = 0,
         eval_fn: Callable | None = None,
+        mesh=None,
     ):
         """``chunk`` rounds of EVERY scenario as one vmapped scan: the
         grid axis G batches the whole ``_train_chunk`` program (states,
         adjacencies, resample flags and inactive ratios all carry a
         leading G), while the federation data/validation set broadcast
         unbatched.  Returns ``(states, losses (G, chunk))`` — plus a
-        metrics dict of ``(G, chunk)`` records when eval is armed."""
+        metrics dict of ``(G, chunk)`` records when eval is armed.
+
+        Mixer dispatch: the tree mixer is a plain ``jax.vmap``.  The
+        SHARDED mixer instead binds the vmapped axis to the 2-D sweep
+        mesh's ``"grid"`` axis (``spmd_axis_name``): the per-scenario
+        shard_map collectives inside ``_round`` keep their node-only
+        axis names, and the batching rule turns them into ONE shard_map
+        over the (grid, node) mesh whose in_specs gain a leading
+        ``P("grid", ...)`` — the grid axis batches, the node axis
+        communicates, and no collective crosses scenarios."""
 
         def one(state, adj, rs, ratio):
             return self._train_chunk(
                 state, x, y, counts, val_x, val_y, (adj, rs, ratio),
                 batch_size=batch_size, chunk=chunk,
-                eval_every=eval_every, eval_fn=eval_fn,
+                eval_every=eval_every, eval_fn=eval_fn, mesh=mesh,
             )
 
+        if self.mixer == "sharded":
+            return jax.vmap(one, spmd_axis_name=mesh.axis_names[0])(
+                states, adjacency, resample, inactive_ratio
+            )
         return jax.vmap(one)(states, adjacency, resample, inactive_ratio)
 
     def train_chunk(
@@ -828,21 +911,33 @@ class GluADFL:
             boundary rounds);
           * ``states`` — final ``FLState`` stacked ``(G, ...)``.
 
-        Single-process only, and only the vmap-safe reference mixer: the
-        sharded mixer's shard_map collectives and the Pallas kernel are
-        per-scenario programs, not batchable ones (run those through
-        serial :meth:`train`).
+        Mixer dispatch — the sweep has two engines:
+
+          * ``mixer="tree"`` — plain ``jax.vmap`` of the reference
+            einsum path (the single-device default);
+          * ``mixer="sharded"`` — the grid becomes a REAL mesh axis: the
+            ``(G, N, ...)`` stacked state is placed on a 2-D
+            ``("grid", "node")`` mesh (``self.mesh`` if given, else
+            ``launch.mesh.make_sweep_mesh``), scenarios batch over
+            ``"grid"`` while the gossip collectives (all-gather /
+            psum-scatter, per ``gossip_impl``) stay scoped to
+            ``"node"`` — per-device memory O(G/grid · N/node · D) with
+            the psum schedule, so paper-scale federations sweep without
+            any device holding the whole grid.
+
+        Single-process only; the Pallas kernel mixer is a per-scenario
+        program and still refuses (run it through serial :meth:`train`).
         """
         if jax.process_count() > 1:
             raise NotImplementedError(
                 "train_sweep batches scenarios on ONE process; multi-host "
                 "runs sweep via serial train() per scenario"
             )
-        if self.mixer != "tree":
+        if self.mixer == "kernel":
             raise NotImplementedError(
-                f"train_sweep vmaps the reference tree mixer; "
-                f"mixer={self.mixer!r} (shard_map / Pallas) is a "
-                f"per-scenario program — use serial train() for it"
+                "train_sweep batches the tree or sharded mixer; "
+                "mixer='kernel' (Pallas) is a per-scenario program — "
+                "use serial train() for it"
             )
         n = self.cfg.num_nodes
         if grid.adjacency.shape[-1] != n:
@@ -859,7 +954,32 @@ class GluADFL:
         do_eval = bool(eval_every) and (eval_fn is not None or val_data is not None)
         resolved = self._resolve_eval_fn(eval_fn) if do_eval else None
 
+        mesh = None
+        if self.mixer == "sharded":
+            from repro.launch.mesh import make_sweep_mesh
+
+            mesh = self.mesh or make_sweep_mesh(grid.size, n)
+            if mesh.axis_names != ("grid", "node"):
+                # the names are the contract: the gossip layer scopes its
+                # collectives to "node" and batches over "grid" by name
+                raise ValueError(
+                    f"swept-sharded training needs a 2-D ('grid', 'node') "
+                    f"mesh (launch.mesh.make_sweep_mesh), got axes "
+                    f"{mesh.axis_names}"
+                )
+            g_ax, n_ax = mesh.axis_names
+            if grid.size % mesh.shape[g_ax] or n % mesh.shape[n_ax]:
+                raise ValueError(
+                    f"sweep mesh {dict(mesh.shape)} does not divide the grid: "
+                    f"G={grid.size}, N={n}"
+                )
+
         states = self._sweep_init_jit(grid.init_keys)
+        if mesh is not None:
+            states = jax.device_put(states, self._sweep_state_shardings(mesh))
+            grid, x, y, counts, val_x, val_y = self._place_sweep_data(
+                mesh, grid, x, y, counts, val_x, val_y
+            )
         g_count = grid.size
         histories: list[list[dict]] = [[] for _ in range(g_count)]
         chunk = max(1, min(chunk or DEFAULT_CHUNK, rounds))
@@ -871,7 +991,7 @@ class GluADFL:
                 x, y, counts, val_x, val_y,
                 batch_size=batch_size, chunk=c,
                 eval_every=eval_every if do_eval else 0,
-                eval_fn=resolved,
+                eval_fn=resolved, mesh=mesh,
             )
             # ONE host sync per chunk for the WHOLE grid
             if do_eval:

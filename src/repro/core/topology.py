@@ -103,15 +103,18 @@ def mixing_matrix(
     """Algorithm 1 lines 7-9 as a row-stochastic matrix.
 
     ``active``: (N,) {0,1}.  Only active nodes mix, and they only count
-    *active* neighbours; each node keeps at most ``comm_batch`` neighbours
-    (we keep the B highest-index active neighbours deterministically via a
-    cumulative-count mask so the op stays jittable).
+    *active* neighbours; each node keeps at most ``comm_batch`` neighbours.
+    The cap is deterministic so the op stays jittable: the left-to-right
+    cumulative count keeps the B LOWEST-index active neighbours of each
+    row and drops the rest (``csum <= comm_batch`` admits a neighbour
+    only while fewer than B active neighbours precede it) — pinned by
+    ``tests/test_topology.py::test_mixing_matrix_cap_keeps_lowest_index``.
     """
     n = adjacency.shape[0]
     act = active.astype(jnp.float32)
     # neighbours that are active
     neigh = adjacency * act[None, :]
-    # cap at comm_batch per row (keep first B active neighbours)
+    # cap at comm_batch per row (keep the B lowest-index active neighbours)
     csum = jnp.cumsum(neigh, axis=1)
     neigh = neigh * (csum <= comm_batch)
     # self weight always included for active rows

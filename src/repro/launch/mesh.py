@@ -60,6 +60,55 @@ def make_federation_mesh(num_nodes: int, *, devices: int | None = None):
     return jax.make_mesh((max(divisors),), ("node",))
 
 
+def _sweep_mesh_widths(num_scenarios: int, num_nodes: int, avail: int) -> tuple[int, int]:
+    """(grid_width, node_width) for :func:`make_sweep_mesh`'s default
+    search: both must divide their extents; maximize devices used, then
+    prefer the wider node axis (the memory-scaled one)."""
+    best = (1, 1)
+    for gw in (d for d in range(1, avail + 1) if num_scenarios % d == 0):
+        for nw in (d for d in range(1, avail // gw + 1) if num_nodes % d == 0):
+            if (gw * nw, nw) > (best[0] * best[1], best[1]):
+                best = (gw, nw)
+    return best
+
+
+def make_sweep_mesh(
+    num_scenarios: int,
+    num_nodes: int,
+    *,
+    devices: int | None = None,
+    grid_width: int | None = None,
+    node_width: int | None = None,
+):
+    """2-D ``("grid", "node")`` mesh for the swept-sharded engine: the
+    grid axis BATCHES scenarios (pure data parallelism — no gossip
+    collective ever crosses it) while the node axis carries the
+    federation collectives, exactly as on the 1-D federation mesh.
+
+    Widths must divide their global extents (shard_map blocks are
+    whole): ``grid_width | num_scenarios`` and ``node_width | num_nodes``.
+    The default search maximizes devices used, tie-breaking toward the
+    node axis — that is the memory-scaled one (psum keeps per-device
+    state at O(G/grid · N/node · D), so widening "node" shrinks what a
+    single device must hold of each scenario).  Degenerate extents fall
+    back gracefully: a (1, 1) mesh on one device is the local
+    contraction, batched.
+
+    Single-process only (scenario sweeps are — multi-host runs sweep
+    via serial ``train()`` per scenario); pass explicit widths to pin a
+    layout in tests."""
+    avail = devices or len(jax.devices())
+    if grid_width is None or node_width is None:
+        grid_width, node_width = _sweep_mesh_widths(num_scenarios, num_nodes, avail)
+    if num_scenarios % grid_width or num_nodes % node_width:
+        raise ValueError(
+            f"sweep mesh widths must divide the grid: "
+            f"G={num_scenarios} % grid_width={grid_width} and "
+            f"N={num_nodes} % node_width={node_width} must both be 0"
+        )
+    return jax.make_mesh((grid_width, node_width), ("grid", "node"))
+
+
 # per-device budget for the gathered (N, D) federation before the
 # allgather mixer's memory cliff outweighs its ICI-friendly schedule;
 # ~1 GiB leaves headroom for the model step on current HBM/host parts

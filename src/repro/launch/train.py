@@ -36,10 +36,15 @@ program (``GluADFL.train_sweep``): per-scenario inactive ratios and
 seed keys are vmapped over the compiled chunk scan, so the grid costs
 one compile per chunk shape instead of G serial runs.  Streaming eval
 (``--eval-every``) stays in-scan and returns a (grid, chunk) record
-stack.  Sweeps are single-process and use the reference tree mixer
-(``--mixer sharded``/``kernel`` and multi-host flags refuse); instead
-of a checkpoint, the launcher writes a per-scenario summary JSON to
-``--out``.
+stack.  With ``--mixer sharded`` the grid becomes a real mesh axis: the
+stacked (G, N, ...) state is placed on a 2-D ("grid", "node") mesh
+(``launch.mesh.make_sweep_mesh``) where scenarios batch over "grid"
+and the gossip collectives (``--gossip-impl allgather|psum|auto``)
+stay scoped to "node" — the memory-scaled way to sweep paper-scale
+federations.  Sweeps are single-process and scan-engine only
+(``--mixer kernel``/``--use-kernel``, ``--engine loop`` and multi-host
+flags refuse); instead of a checkpoint, the launcher writes a
+per-scenario summary JSON to ``--out``.
 
 Gossip impl (``--mixer sharded`` only)
 --------------------------------------
@@ -196,9 +201,10 @@ def main():
         if distributed:
             raise SystemExit("scenario sweeps are single-process "
                              "(drop --num-processes or --sweep-ratios)")
-        if args.mixer not in (None, "tree") or args.use_kernel:
-            raise SystemExit("scenario sweeps vmap the reference tree "
-                             "mixer (drop --mixer/--use-kernel)")
+        if args.mixer == "kernel" or args.use_kernel:
+            raise SystemExit("scenario sweeps batch the tree or sharded "
+                             "mixer; the Pallas kernel is per-scenario "
+                             "(drop --mixer kernel/--use-kernel)")
         if args.engine == "loop" or args.chunk == 0:
             raise SystemExit("scenario sweeps need the scan engine "
                              "(drop --engine loop / --chunk 0)")
@@ -228,18 +234,46 @@ def main():
         cfg.fl, topology=args.topology, num_nodes=fed.num_nodes,
         rounds=args.rounds, inactive_ratio=args.inactive_ratio,
     )
+    # the scenario grid and its mesh come FIRST: the auto gossip-impl
+    # choice must budget for the swept working set, and the trainer gets
+    # the one mesh train_sweep will actually run on
+    sweep_grid = sweep_mesh = None
+    if sweep_ratios is not None:
+        from repro.core import SweepGrid
+
+        sweep_grid = SweepGrid.build(
+            [args.topology], sweep_ratios, range(args.sweep_seeds),
+            num_nodes=fed.num_nodes, cluster_size=fl_cfg.cluster_size,
+        )
+        if args.mixer == "sharded":
+            from repro.launch.mesh import make_sweep_mesh
+
+            sweep_mesh = make_sweep_mesh(sweep_grid.size, fed.num_nodes)
+
     gossip_impl = args.gossip_impl
     if gossip_impl == "auto":
         from repro.launch.mesh import choose_gossip_impl
 
         p0 = model.init(jax.random.PRNGKey(0))
         node_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(p0))
-        gossip_impl = choose_gossip_impl(fed.num_nodes, node_bytes)
+        if sweep_mesh is not None:
+            # swept-sharded: the allgather schedule gathers the node axis
+            # of EVERY locally-held scenario block, so the per-device
+            # working set is (G/grid_width) x the serial estimate — and
+            # psum's shard count is the SWEEP mesh's node width, not the
+            # 1-D federation mesh's
+            g_local = sweep_grid.size // sweep_mesh.shape["grid"]
+            gossip_impl = choose_gossip_impl(
+                fed.num_nodes, node_bytes * g_local,
+                shards=sweep_mesh.shape["node"],
+            )
+        else:
+            gossip_impl = choose_gossip_impl(fed.num_nodes, node_bytes)
         print(f"gossip-impl auto -> {gossip_impl}")
 
     trainer = GluADFL(model, get_optimizer(cfg.train.optimizer, cfg.train.lr),
                       fl_cfg, use_kernel=args.use_kernel, mixer=args.mixer,
-                      gossip_impl=gossip_impl)
+                      gossip_impl=gossip_impl, mesh=sweep_mesh)
 
     # pre-batched validation set for the in-scan streaming eval: a capped
     # slice of every patient's val windows (one fixed array -> scan const)
@@ -253,16 +287,17 @@ def main():
               f"{len(val_x)} val windows (in-scan)")
 
     if sweep_ratios is not None:
-        from repro.core import SweepGrid
         from repro.utils.pytree import tree_index
 
-        grid = SweepGrid.build(
-            [args.topology], sweep_ratios, range(args.sweep_seeds),
-            num_nodes=fed.num_nodes, cluster_size=fl_cfg.cluster_size,
-        )
+        grid = sweep_grid
         print(f"sweep: {grid.size} scenarios "
               f"({args.topology} x {sweep_ratios} x {args.sweep_seeds} seeds) "
               f"as one batched program")
+        if sweep_mesh is not None:
+            # the trainer holds this exact mesh — train_sweep runs on it
+            print(f"sweep mesh: {dict(sweep_mesh.shape)} over "
+                  f"{len(jax.devices())} devices "
+                  f"(grid batches, node carries the gossip collectives)")
         pops, hists, _ = trainer.train_sweep(
             fed.x, fed.y, fed.counts, grid=grid,
             batch_size=cfg.train.batch_size, chunk=args.chunk or None,

@@ -57,6 +57,29 @@ def test_extra_fresh_row_is_ignored(gate, tmp_path):
     assert _run(gate, tmp_path, _report(BASE), _report(fresh)) == 0
 
 
+def test_wall_clock_rows_excluded_from_ratio_rule(gate, tmp_path):
+    """The compile-inclusive wall-clock rows (serial-sweep, sweep-scan,
+    sweep-sharded-psum) are not machine-portable ratios: halving them
+    must NOT trip the loop-ratio gate as long as they stay present."""
+    base = dict(BASE, **{"serial-sweep": 20.0, "sweep-scan": 60.0,
+                         "sweep-sharded-psum": 30.0})
+    fresh = dict(base, **{"serial-sweep": 10.0, "sweep-scan": 30.0,
+                          "sweep-sharded-psum": 1.0})
+    fresh_report = _report(fresh)
+    fresh_report["sweep_scan_speedup_vs_serial"] = 3.0  # same-run floor holds
+    assert _run(gate, tmp_path, _report(base), fresh_report) == 0
+
+
+def test_missing_wall_clock_row_fails(gate, tmp_path):
+    """A baseline wall-clock row vanishing from the fresh run means the
+    engine path silently stopped being measured — that must fail."""
+    base = dict(BASE, **{"sweep-sharded-psum": 30.0})
+    fresh = {k: v for k, v in base.items() if k != "sweep-sharded-psum"}
+    assert _run(gate, tmp_path, _report(base), _report(fresh)) == 1
+    # ...but a baseline without the row doesn't demand one (old baselines)
+    assert _run(gate, tmp_path, _report(BASE), _report(base)) == 0
+
+
 def test_exactly_at_threshold_ratio_passes(gate, tmp_path):
     """The floor is inclusive: a speedup ratio at exactly
     baseline * (1 - threshold) must NOT fail (f < floor, not <=)."""

@@ -67,6 +67,105 @@ def test_sharded_general_gossip_matches_reference():
 
 
 @pytest.mark.multidevice
+def test_ring_gossip_multi_node_shards_match_reference():
+    """BUGFIX PIN: with >1 node per shard the ring body must average row
+    i with its ACTUAL ring neighbours i±1 — the pre-fix code ppermuted
+    whole shard blocks, handing interior rows the params of rows
+    i±nodes_per_shard.  2 nodes/shard (N=8 over 4 shards) against the
+    dense mixing-matrix ring, all-active and partially-active."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import make_sharded_gossip
+        from repro.core.topology import mixing_matrix, ring_adjacency
+        from repro.utils.pytree import tree_weighted_mix
+        mesh = jax.make_mesh((4,), ("data",))  # 8 nodes -> 2 per shard
+        N, D = 8, 24
+        w = {"a": jax.random.normal(jax.random.PRNGKey(0), (N, D)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (N, 3, 5))}
+        gossip = jax.jit(make_sharded_gossip(mesh, ("data",), "ring"))
+        for label, active in (
+            ("all-active", jnp.ones((N,))),
+            ("partial", jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0], jnp.float32)),
+        ):
+            out = gossip(w, active)
+            ref = tree_weighted_mix(w, mixing_matrix(ring_adjacency(N), active, 7))
+            for k in w:
+                np.testing.assert_allclose(
+                    np.asarray(out[k]), np.asarray(ref[k]), rtol=2e-5, atol=1e-5,
+                    err_msg=f"{label}/{k}")
+            # inactive rows bit-exact
+            idx = np.where(np.asarray(active) == 0)[0]
+            for k in w:
+                np.testing.assert_array_equal(
+                    np.asarray(out[k])[idx], np.asarray(w[k])[idx])
+        print("RING_BLOCK_OK")
+    """, devices=4))
+
+
+@pytest.mark.multidevice
+def test_grid_sharded_gossip_mix_matches_dense():
+    """The 2-D (grid, node) sweep mesh: ONE shard_map with P("grid", ...)
+    in_specs mixes every scenario's federation — each scenario g must
+    match the dense per-scenario contraction, for BOTH collective
+    schedules, with bit-exact inactive rows; and the explicit grid call
+    must agree with vmap(spmd_axis_name="grid") over the per-scenario
+    call (the trainer's swept-sharded lowering)."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import sharded_gossip_mix
+        from repro.core.topology import mixing_matrix, random_adjacency
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh(4, 8, grid_width=2, node_width=4)
+        assert dict(mesh.shape) == {"grid": 2, "node": 4}
+        G, N, D = 4, 8, 48
+        k = jax.random.split(jax.random.PRNGKey(0), 3)
+        w = {"a": jax.random.normal(k[0], (G, N, D)),
+             "b": jax.random.normal(k[1], (G, N, 3, 5))}
+        active = (jax.random.uniform(k[2], (G, N)) > 0.4).astype(jnp.float32)
+        mix = jnp.stack([
+            mixing_matrix(random_adjacency(jax.random.PRNGKey(g), N, 3),
+                          active[g], 3)
+            for g in range(G)
+        ])
+        for impl in ("allgather", "psum"):
+            out = jax.jit(lambda ww, mm, aa: sharded_gossip_mix(
+                ww, mm, aa, mesh=mesh, impl=impl))(w, mix, active)
+            batched = jax.jit(jax.vmap(
+                lambda ww, mm, aa: sharded_gossip_mix(
+                    ww, mm, aa, mesh=mesh, impl=impl),
+                spmd_axis_name="grid"))(w, mix, active)
+            for kk in w:
+                flat = w[kk].reshape(G, N, -1)
+                ref = jnp.einsum("gnm,gmd->gnd", mix, flat).reshape(w[kk].shape)
+                np.testing.assert_allclose(
+                    np.asarray(out[kk]), np.asarray(ref), atol=1e-5)
+                np.testing.assert_allclose(
+                    np.asarray(batched[kk]), np.asarray(ref), atol=1e-5)
+                idx = np.where(np.asarray(active) == 0)
+                np.testing.assert_array_equal(
+                    np.asarray(out[kk])[idx], np.asarray(w[kk])[idx])
+        print("GRID_MIX_OK")
+    """))
+
+
+def test_sharded_gossip_mix_shape_mismatch_fails_at_trace():
+    """Mismatched scenario grids must fail with readable shapes at trace
+    time, not inside the collective (single-device (1, 1) sweep mesh)."""
+    import jax.numpy as jnp
+
+    from repro.core.distributed import sharded_gossip_mix
+    from repro.launch.mesh import make_sweep_mesh
+
+    mesh = make_sweep_mesh(3, 8, grid_width=1, node_width=1)
+    w = {"a": jnp.ones((3, 8, 4))}
+    with pytest.raises(ValueError, match="leading dim"):
+        sharded_gossip_mix(w, jnp.stack([jnp.eye(8)] * 4), mesh=mesh)
+    # a 2-D mix on a grid mesh is a mis-shaped call, not a silent demotion
+    with pytest.raises(ValueError, match="mixing matrix"):
+        sharded_gossip_mix(w, jnp.eye(8), mesh=mesh, grid_axis="grid")
+
+
+@pytest.mark.multidevice
 def test_sharded_ring_gossip_respects_inactive():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np

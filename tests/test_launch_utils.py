@@ -107,6 +107,42 @@ def test_gossip_dp_ring_specs_roundtrip():
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(params["w"]), atol=1e-6)
 
 
+def test_sweep_mesh_width_search():
+    """The (grid, node) width search: both widths divide their extents,
+    devices used are maximized, ties break toward the node axis (the
+    memory-scaled one)."""
+    from repro.launch.mesh import _sweep_mesh_widths
+
+    # Fig-5 grid (15 scenarios) x 32 nodes on 8 devices: full node shard
+    assert _sweep_mesh_widths(15, 32, 8) == (1, 8)
+    # G=4, N=6: (4, 2) uses all 8 devices, beating the (1, 6)/(2, 3) layouts
+    assert _sweep_mesh_widths(4, 6, 8) == (4, 2)
+    # equal-total candidates (2, 4) vs (4, 2): node axis wins the tie
+    assert _sweep_mesh_widths(4, 4, 8) == (2, 4)
+    # degenerate: nothing divides -> (1, 1) local fallback
+    assert _sweep_mesh_widths(7, 13, 4) == (1, 1)
+    # single device
+    assert _sweep_mesh_widths(15, 226, 1) == (1, 1)
+
+
+def test_make_sweep_mesh_contract():
+    """The sweep mesh always keeps the 2-D ("grid", "node") contract
+    and divides its extents — down to the degenerate one-device (1, 1)
+    local fallback (``devices=1`` caps the search regardless of how
+    many devices the test process exposes); invalid explicit widths
+    refuse."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    mesh = make_sweep_mesh(15, 32, devices=1)
+    assert mesh.axis_names == ("grid", "node")
+    assert dict(mesh.shape) == {"grid": 1, "node": 1}
+    auto = make_sweep_mesh(15, 32)
+    assert auto.axis_names == ("grid", "node")
+    assert 15 % auto.shape["grid"] == 0 and 32 % auto.shape["node"] == 0
+    with pytest.raises(ValueError, match="divide"):
+        make_sweep_mesh(15, 32, grid_width=2, node_width=1)
+
+
 def test_choose_gossip_impl_memory_heuristic():
     """--gossip-impl auto: allgather while the gathered (N, D) federation
     fits the per-device budget, psum above it; single-shard meshes always

@@ -249,19 +249,53 @@ def test_train_sweep_compiled_execution_budget():
 
 
 def test_train_sweep_guards():
-    """Wrong-N grids and non-vmappable mixers must refuse loudly."""
+    """Wrong-N grids, the per-scenario Pallas mixer, and non-sweep
+    meshes must refuse loudly."""
     model = LSTMModel(hidden=8).as_model()
     grid = SweepGrid.build(("ring",), (0.0,), (0,), num_nodes=4)
     tr = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6))
     with pytest.raises(ValueError, match="num_nodes"):
         tr.train_sweep(*_toy_fed(), grid=grid)
-    tr_sharded = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6),
-                         mixer="sharded")
     grid6 = SweepGrid.build(("ring",), (0.0,), (0,), num_nodes=6)
-    with pytest.raises(NotImplementedError, match="mixer"):
-        tr_sharded.train_sweep(*_toy_fed(), grid=grid6)
+    tr_kernel = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6),
+                        mixer="kernel")
+    with pytest.raises(NotImplementedError, match="kernel"):
+        tr_kernel.train_sweep(*_toy_fed(), grid=grid6)
+    # the swept-sharded engine needs the 2-D (grid, node) mesh — a 1-D
+    # federation mesh is the serial train() layout, not the sweep's
+    tr_1d = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6),
+                    mixer="sharded", mesh=jax.make_mesh((1,), ("node",)))
+    with pytest.raises(ValueError, match="2-D"):
+        tr_1d.train_sweep(*_toy_fed(), grid=grid6)
     with pytest.raises(ValueError, match="empty"):
         SweepGrid.build((), (0.0,), (0,), num_nodes=6)
+
+
+def test_train_sweep_sharded_matches_tree_in_process():
+    """The swept-sharded engine must match the swept tree mixer exactly
+    — same key streams, same losses, same populations — on whatever
+    sweep mesh the test process's devices give (a degenerate (1, 1)
+    local mesh on one device; a real multi-device mesh when another
+    test module forced an XLA device count).  This keeps the 2-D
+    dispatch path covered by tier-1; the pinned-layout multi-device
+    parity lives in the ``multidevice`` test below."""
+    rounds = 4
+    x, y, counts = _toy_fed()
+    model = LSTMModel(hidden=8).as_model()
+    grid = SweepGrid.build(("ring", "random"), (0.0, 0.4), (0,), num_nodes=6)
+    cfg = FLConfig(num_nodes=6, comm_batch=3, rounds=rounds)
+    pops_t, hists_t, _ = GluADFL(model, sgd(1e-2), cfg).train_sweep(
+        x, y, counts, grid=grid, batch_size=8
+    )
+    for impl in ("allgather", "psum"):
+        tr = GluADFL(model, sgd(1e-2), cfg, mixer="sharded", gossip_impl=impl)
+        pops_s, hists_s, _ = tr.train_sweep(x, y, counts, grid=grid, batch_size=8)
+        for g in range(grid.size):
+            for a, b in zip(hists_s[g], hists_t[g]):
+                assert abs(a["loss"] - b["loss"]) < 1e-5, (impl, g, a, b)
+            assert float(
+                tree_l2_norm(tree_sub(tree_index(pops_s, g), tree_index(pops_t, g)))
+            ) < 1e-5, (impl, g)
 
 
 @pytest.mark.multidevice
@@ -307,3 +341,76 @@ def test_train_sweep_parity_on_forced_8_devices():
     )
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SWEEP_8DEV_OK" in out.stdout
+
+
+@pytest.mark.multidevice
+def test_train_sweep_sharded_parity_on_forced_8_devices():
+    """The swept-SHARDED engine on a real 2-D (2 grid x 4 node) mesh:
+    scenario g of ``train_sweep(mixer="sharded")`` must match a serial
+    ``train(mixer="sharded", key=PRNGKey(seed_g))`` run — params,
+    losses, AND streaming-eval records — for BOTH collective schedules
+    (allgather and psum), plus the final-state key chain/staleness.
+    The serial runs use the 1-D federation mesh, so this also pins that
+    the (grid, node) lowering changes the schedule, not the numbers."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    src = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config import FLConfig
+        from repro.core import GluADFL, SweepGrid
+        from repro.launch.mesh import make_sweep_mesh
+        from repro.models import LSTMModel
+        from repro.optim import sgd
+        from repro.utils.pytree import tree_index, tree_l2_norm, tree_sub
+
+        assert len(jax.devices()) == 8
+        rng = np.random.default_rng(0)
+        n, rounds, chunk, eval_every = 8, 5, 4, 2
+        x = jnp.asarray(rng.normal(size=(n, 24, 12)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(n, 24)).astype(np.float32))
+        counts = jnp.asarray(np.full((n,), 24, np.int32))
+        vx = jnp.asarray(rng.normal(size=(16, 12)).astype(np.float32))
+        vy = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+        model = LSTMModel(hidden=8).as_model()
+        grid = SweepGrid.build(("ring", "random"), (0.0, 0.5), (0,), num_nodes=n)
+        mesh = make_sweep_mesh(grid.size, n, grid_width=2, node_width=4)
+        assert dict(mesh.shape) == {"grid": 2, "node": 4}
+        for impl in ("allgather", "psum"):
+            tr = GluADFL(model, sgd(1e-2),
+                         FLConfig(num_nodes=n, comm_batch=3, rounds=rounds),
+                         mixer="sharded", gossip_impl=impl, mesh=mesh)
+            pops, hists, states = tr.train_sweep(
+                x, y, counts, grid=grid, batch_size=8, chunk=chunk,
+                eval_every=eval_every, val_data=(vx, vy))
+            for g, (topo, ratio, seed) in enumerate(grid.labels):
+                cfg = FLConfig(topology=topo, num_nodes=n, comm_batch=3,
+                               rounds=rounds, inactive_ratio=ratio)
+                s_tr = GluADFL(model, sgd(1e-2), cfg,
+                               mixer="sharded", gossip_impl=impl)
+                pop, hist, st = s_tr.train(
+                    jax.random.PRNGKey(seed), x, y, counts, batch_size=8,
+                    chunk=chunk, eval_every=eval_every, val_data=(vx, vy))
+                assert len(hists[g]) == rounds
+                for a, b in zip(hists[g], hist):
+                    assert abs(a["loss"] - b["loss"]) < 1e-4, (impl, g, a, b)
+                    assert ("val_rmse" in a) == ("val_rmse" in b)
+                    if "val_rmse" in a:
+                        assert abs(a["val_rmse"] - b["val_rmse"]) < 1e-4
+                assert sum("val_rmse" in h for h in hists[g]) == 2
+                assert float(tree_l2_norm(tree_sub(
+                    tree_index(pops, g), pop))) < 1e-4, (impl, g)
+                np.testing.assert_array_equal(
+                    np.asarray(states.key[g]), np.asarray(st.key))
+                np.testing.assert_allclose(
+                    np.asarray(states.staleness[g]),
+                    np.asarray(st.staleness), atol=0)
+            print(f"SWEEP_SHARDED_{impl.upper()}_OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(src)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SWEEP_SHARDED_ALLGATHER_OK" in out.stdout
+    assert "SWEEP_SHARDED_PSUM_OK" in out.stdout

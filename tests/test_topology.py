@@ -85,6 +85,27 @@ def test_mixing_matrix_comm_batch_cap():
     assert ((m > 0).sum(1) <= 4).all()
 
 
+def test_mixing_matrix_cap_keeps_lowest_index():
+    """Pins WHICH neighbours survive the comm_batch cap: the cumulative-
+    count mask keeps the B LOWEST-index active neighbours of each row
+    (the docstring's promise must match ``csum <= comm_batch``)."""
+    n, B = 6, 2
+    adj = full_adjacency(n)
+    # all active: row i keeps its first B non-self columns
+    m = np.asarray(mixing_matrix(adj, jnp.ones((n,)), B))
+    for i in range(n):
+        kept = [j for j in range(n) if j != i and m[i, j] > 0]
+        expect = [j for j in range(n) if j != i][:B]
+        assert kept == expect, (i, kept, expect)
+        np.testing.assert_allclose(m[i, kept + [i]], 1.0 / (B + 1), atol=1e-6)
+    # inactive neighbours don't consume cap slots: with node 0 inactive,
+    # row 5 keeps active neighbours {1, 2}, not {0, 1}
+    active = jnp.ones((n,)).at[0].set(0.0)
+    m = np.asarray(mixing_matrix(adj, active, B))
+    kept = [j for j in range(n) if j != 5 and m[5, j] > 0]
+    assert kept == [1, 2], kept
+
+
 def test_spectral_gap_ordering():
     """More connectivity => larger spectral gap (faster gossip mixing) —
     the paper's Fig 4 explanation (random > cluster > ring)."""
