@@ -20,7 +20,17 @@ engine's speedup over the loop engine measured in the SAME process:
     The two sweep rows are END-TO-END wall clock with compile time
     included, so they are deliberately EXCLUDED from the loop-ratio rule
     above (that ratio is not machine-portable for compile-bound rows)
-    and gated only by this same-run speedup.
+    and gated only by this same-run speedup;
+  * ``sparse_gossip_speedup_vs_dense`` (sparse-gossip-n226 /
+    dense-gossip-n226, same process, same federation, only the mixing
+    representation differs) must stay >= ``--sparse-floor`` (default
+    0.9): the O(N·B) neighbor table must not lose to the (N, N) matrix
+    at paper scale (nominal claim >= 1.0; the floor concedes 10% to
+    shared-runner jitter).  The representation rows and the sparse-only
+    ``sparse-gossip-10k`` scaling row are wall-clock/alternate-config
+    rows — excluded from the loop-ratio rule, presence-checked instead
+    (a vanished row is how the 10k-scale path would quietly stop being
+    measured).
 
 ``--absolute`` additionally gates raw rounds/sec (same-machine
 comparisons, e.g. a perf bisect on one box).
@@ -51,6 +61,9 @@ DEFAULT_EVAL_FLOOR = 0.9
 # acceptance target: the batched sweep engine >= 2x the serial sweep at
 # bench scale (same jitter caveat as above applies)
 DEFAULT_SWEEP_FLOOR = 2.0
+# acceptance target: the sparse gossip representation never slower than
+# dense at N=226 — nominally >= 1.0, gated at 0.9 for runner jitter
+DEFAULT_SPARSE_FLOOR = 0.9
 
 
 # wall-clock rows (compile time included by design) — their ratio to the
@@ -62,14 +75,20 @@ DEFAULT_SWEEP_FLOOR = 2.0
 # that is how a benched engine path quietly stops being measured)
 WALL_CLOCK_ROWS = ("serial-sweep", "sweep-scan", "sweep-sharded-psum")
 
+# rows gated by a same-run floor / presence instead of the loop ratio:
+# the representation pair runs a different model width than the engine
+# rows (their loop ratio would compare apples to oranges) and the 10k
+# row is compile-included wall clock by design
+SPARSE_ROWS = ("dense-gossip-n226", "sparse-gossip-n226", "sparse-gossip-10k")
+
 
 def _ratios(report: dict) -> dict[str, float]:
     rps = report["rounds_per_sec"]
     loop = rps.get("loop")
     if not loop:
         raise SystemExit("report has no loop-engine rounds/sec to normalize by")
-    return {e: v / loop for e, v in rps.items()
-            if e != "loop" and e not in WALL_CLOCK_ROWS}
+    skip = ("loop",) + WALL_CLOCK_ROWS + SPARSE_ROWS
+    return {e: v / loop for e, v in rps.items() if e not in skip}
 
 
 def main(argv=None) -> int:
@@ -84,6 +103,8 @@ def main(argv=None) -> int:
                     help="min allowed scan-eval/scan relative throughput")
     ap.add_argument("--sweep-floor", type=float, default=DEFAULT_SWEEP_FLOOR,
                     help="min allowed sweep-scan/serial-sweep speedup")
+    ap.add_argument("--sparse-floor", type=float, default=DEFAULT_SPARSE_FLOOR,
+                    help="min allowed sparse/dense gossip speedup at N=226")
     ap.add_argument("--absolute", action="store_true",
                     help="also gate raw rounds/sec (same-machine runs only)")
     ap.add_argument("--update", action="store_true",
@@ -99,8 +120,9 @@ def main(argv=None) -> int:
     base = json.loads(Path(args.baseline).read_text())
     failures: list[str] = []
 
-    # wall-clock rows skip the ratio rule but must not silently vanish
-    for row in WALL_CLOCK_ROWS:
+    # wall-clock / alternate-config rows skip the ratio rule but must
+    # not silently vanish
+    for row in WALL_CLOCK_ROWS + SPARSE_ROWS:
         if row in base.get("rounds_per_sec", {}):
             present = row in fresh.get("rounds_per_sec", {})
             print(f"{row:>20s}: wall-clock row "
@@ -148,6 +170,19 @@ def main(argv=None) -> int:
     elif "sweep-scan" in base.get("rounds_per_sec", {}):
         failures.append("baseline has a sweep-scan row but the fresh run "
                         "reports no sweep_scan_speedup_vs_serial")
+
+    sparse = fresh.get("sparse_gossip_speedup_vs_dense")
+    if sparse is not None:
+        verdict = "FAIL" if sparse < args.sparse_floor else "ok"
+        print(f"{'sparse/dense gossip':>20s}: {sparse:6.2f}x "
+              f"(floor {args.sparse_floor}x) {verdict}")
+        if sparse < args.sparse_floor:
+            failures.append(
+                f"sparse gossip only {sparse:.2f}x the dense representation "
+                f"at N=226 (floor {args.sparse_floor}x)")
+    elif "sparse-gossip-n226" in base.get("rounds_per_sec", {}):
+        failures.append("baseline has a sparse-gossip-n226 row but the fresh "
+                        "run reports no sparse_gossip_speedup_vs_dense")
 
     if args.absolute:
         for engine, b in sorted(base["rounds_per_sec"].items()):

@@ -45,6 +45,21 @@ path under its execution strategies.
                     overhead rather than a speedup — the row exists so
                     the schedule's cost stays measured and its presence
                     gated;
+  * dense-gossip-n226 / sparse-gossip-n226 — the paper-scale federation
+                    (N=226, REPLACE-BG) under the dense (N, N)
+                    ``mixing_matrix`` representation vs the O(N·B)
+                    neighbor-table one (``gossip_repr="sparse"``),
+                    steady-state scan engine, everything else identical.
+                    The claim under test: the sparse representation is
+                    never slower at paper scale
+                    (``sparse_gossip_speedup_vs_dense`` in the JSON);
+  * sparse-gossip-10k — the row the dense representation CANNOT run: a
+                    10 000-node ring federation, where the dense path
+                    would materialize a 10k x 10k f32 matrix (400 MB)
+                    per round while the neighbor table holds 10k x 3
+                    entries.  Sparse-only END-TO-END wall clock (compile
+                    included — population scale runs once, like the
+                    sweep rows); the gate checks presence, not a ratio;
   * multihost-psum-scan — OPTIONAL (``--processes P``, P >= 2): the same
                     psum schedule but with the node axis spanning P REAL
                     ``jax.distributed`` processes over localhost TCP
@@ -235,6 +250,58 @@ def bench_sweep_sharded(make_trainer, x, y, counts, *, nodes: int, rounds: int,
     return best
 
 
+def bench_sparse_gossip(args) -> dict:
+    """The sparse-representation family: dense vs sparse at the paper's
+    N=226, plus the 10k-node row only the sparse path can run.
+
+    The N=226 pair shares one federation, model, and config — the ONLY
+    difference is ``gossip_repr`` — so the ratio isolates the mixing
+    representation.  The 10k row is end-to-end (compile included):
+    population-scale federations run once, and its point is existence —
+    the dense twin would build a 400 MB (10k, 10k) f32 matrix every
+    round."""
+    import jax
+
+    from repro.config import FLConfig
+    from repro.core import GluADFL
+    from repro.models import LSTMModel
+    from repro.optim import sgd
+
+    n = args.sparse_nodes
+    rounds = args.sparse_rounds
+    cfg = FLConfig(topology="ring", num_nodes=n, rounds=rounds,
+                   comm_batch=7, inactive_ratio=0.3)
+    x, y, counts = synth_federation(n, 4, 12, seed=2)
+
+    # hidden=32 (not the engine rows' 16): the parameter dimension must
+    # be large enough that the O(N^2 · D) dense contraction is a real
+    # share of the round, or the ratio just measures scheduler noise
+    out = {}
+    for name, repr_ in (("dense-gossip-n226", "dense"),
+                        ("sparse-gossip-n226", "sparse")):
+        tr = GluADFL(LSTMModel(hidden=args.sparse_hidden).as_model(),
+                     sgd(1e-2), cfg, gossip_repr=repr_)
+        out[name] = bench_engine(tr, x, y, counts, rounds=rounds,
+                                 batch_size=4, chunk=rounds, engine="scan")
+
+    nb = args.sparse_big_nodes
+    if nb:
+        cfg_big = FLConfig(topology="ring", num_nodes=nb, rounds=2,
+                           comm_batch=7, inactive_ratio=0.2)
+        xb, yb, cb = synth_federation(nb, 2, 12, seed=3)
+
+        def run_big():
+            tr = GluADFL(LSTMModel(hidden=4).as_model(), sgd(1e-2), cfg_big,
+                         gossip_repr="sparse")
+            tr.train(jax.random.PRNGKey(0), xb, yb, cb, batch_size=2,
+                     rounds=2, chunk=2)
+
+        t0 = time.perf_counter()
+        run_big()
+        out["sparse-gossip-10k"] = 2 / (time.perf_counter() - t0)
+    return out
+
+
 def _bench_multihost_worker(args) -> None:
     """One process of the multihost row: join the localhost cluster,
     place this host's node rows, and time the psum scan engine.  Only
@@ -356,6 +423,17 @@ def main(argv=None):
                     help="streaming-eval cadence for the scan-eval row "
                          "(0 disables the row)")
     ap.add_argument("--topology", default="random")
+    ap.add_argument("--sparse-nodes", type=int, default=226,
+                    help="federation size for the dense-vs-sparse "
+                         "gossip-representation pair (paper scale)")
+    ap.add_argument("--sparse-rounds", type=int, default=8,
+                    help="steady-state rounds for the representation pair")
+    ap.add_argument("--sparse-hidden", type=int, default=32,
+                    help="model width for the representation pair (large "
+                         "enough that mixing is a real share of the round)")
+    ap.add_argument("--sparse-big-nodes", type=int, default=10000,
+                    help="node count for the sparse-only scaling row "
+                         "(0 skips it)")
     ap.add_argument("--processes", type=int, default=0,
                     help="add the multihost-psum-scan row: split the node "
                          "axis over this many REAL jax.distributed "
@@ -420,6 +498,8 @@ def main(argv=None):
         batch_size=args.batch, chunk=args.chunk,
     )
 
+    results.update(bench_sparse_gossip(args))
+
     if args.processes and args.processes >= 2:
         results["multihost-psum-scan"] = _bench_multihost(args)
 
@@ -428,7 +508,12 @@ def main(argv=None):
            "scan_speedup_vs_loop": results["scan"] / results["loop"],
            # batching the ablation grid must beat running it serially:
            # acceptance target >= 2x at bench scale
-           "sweep_scan_speedup_vs_serial": sweep_rps / serial_rps}
+           "sweep_scan_speedup_vs_serial": sweep_rps / serial_rps,
+           # the O(N·B) representation must never lose to the (N, N)
+           # matrix at paper scale: acceptance target >= the gate's
+           # --sparse-floor (1.0 nominal, 0.9 gated for CPU noise)
+           "sparse_gossip_speedup_vs_dense":
+               results["sparse-gossip-n226"] / results["dense-gossip-n226"]}
     if "scan-eval" in results:
         # streaming-eval overhead: 1.0 = free, acceptance target >= 0.9
         out["scan_eval_relative_throughput"] = results["scan-eval"] / results["scan"]
@@ -443,6 +528,8 @@ def main(argv=None):
               f"{out['scan_eval_relative_throughput']:.3f} (target >= 0.9)")
     print(f"sweep-scan speedup vs serial sweep: "
           f"{out['sweep_scan_speedup_vs_serial']:.2f}x (target >= 2)")
+    print(f"sparse gossip speedup vs dense @ N={args.sparse_nodes}: "
+          f"{out['sparse_gossip_speedup_vs_dense']:.2f}x (target >= 1)")
     return out
 
 

@@ -55,9 +55,19 @@ def sweep_active_masks(key, n: int, inactive_ratios: jnp.ndarray) -> jnp.ndarray
 
 
 def markov_active(key, prev_active: jnp.ndarray, p_stay_active=0.9, p_stay_inactive=0.7):
+    """Sticky busy/free chain: a node active (inactive) last round stays
+    active with ``p_stay_active`` (activates with ``1 - p_stay_inactive``).
+    Same ≥1-active guarantee as :func:`bernoulli_active` — a sticky
+    all-busy draw would otherwise make the round a silent global no-op
+    (and, at ``p_stay_inactive=1``, an absorbing state no later round
+    escapes)."""
     u = jax.random.uniform(key, prev_active.shape)
     stay = jnp.where(prev_active > 0, p_stay_active, 1.0 - p_stay_inactive)
-    return (u < stay).astype(jnp.float32)
+    active = (u < stay).astype(jnp.float32)
+    any_active = jnp.max(active)
+    # the node closest to its activation threshold flips on
+    fallback = jnp.zeros_like(active).at[jnp.argmin(u - stay)].set(1.0)
+    return jnp.where(any_active > 0, active, fallback)
 
 
 def round_robin_active(t: int, n: int, active_fraction: float) -> jnp.ndarray:

@@ -28,6 +28,14 @@ At fleet scale the federation axis N is sharded over the mesh's node axis
 All paths are ``shard_map``s so the collective schedule is explicit and
 the dry-run can count its bytes.
 
+Representation: the general paths above contract a dense (N, N) mixing
+matrix.  ``gossip_repr="sparse"`` (:func:`sharded_gossip_mix_sparse`)
+replaces it with ``core.topology.neighbor_table``'s (N, B+1) index/weight
+table — same all-gather wire, but the local contraction gathers only the
+B+1 referenced rows per output row, dropping per-device flops from
+O(N/shards · N · D) to O(N/shards · B · D) and eliminating every (N, N)
+operand.
+
 Sweep batching: every shard body below is written dim-relative (ellipsis
 einsums, gather/scatter on the second-to-last axis), so the SAME bodies
 run under a 2-D ``("grid", "node")`` sweep mesh
@@ -64,6 +72,10 @@ PyTree = Any
 
 # interchangeable schedules for the general (non-ring) sharded mix
 GOSSIP_IMPLS = ("allgather", "psum")
+
+# mixing-operator representations: dense (N, N) matrix vs (N, B+1)
+# neighbor table (core.topology.neighbor_table)
+GOSSIP_REPRS = ("dense", "sparse")
 
 
 def ring_gossip_shard(w, active, *, axis: str, n_shards: int, self_w: float = 1.0 / 3.0):
@@ -133,6 +145,24 @@ def psum_gossip_shard(w, mix_cols, *, axis: str):
         contrib, axis, scatter_dimension=contrib.ndim - 2, tiled=True
     )
     return out.astype(w.dtype)
+
+
+def sparse_gossip_shard(w, idx, wgt, *, axis: str):
+    """shard_map body: neighbor-table (sparse) mix.  ``idx``/``wgt`` are
+    this shard's (..., N/s, B+1) table rows; the node axis of ``w`` is
+    all-gathered (same wire as ``general_gossip_shard``) but the local
+    contraction gathers only the B+1 referenced rows per output row —
+    O(N/s · B · D) flops instead of O(N/s · N · D).  Per-device MEMORY
+    still holds the gathered (N, D) federation, like the allgather impl;
+    the flop (and dense-matrix storage) saving is the point.  Leading
+    dims (the sweep mesh's local grid block) batch straight through:
+    every index below is dim-relative."""
+    w_all = jax.lax.all_gather(w, axis, tiled=True, axis=w.ndim - 2)
+    # (..., 1, N, D) gathered rows indexed by (..., k, B+1, 1) -> (..., k, B+1, D)
+    rows = jnp.take_along_axis(
+        w_all.astype(jnp.float32)[..., None, :, :], idx[..., None], axis=-2
+    )
+    return jnp.einsum("...kb,...kbd->...kd", wgt, rows).astype(w.dtype)
 
 
 def process_row_slice(sharding: NamedSharding, global_shape: tuple) -> slice:
@@ -271,6 +301,81 @@ def sharded_gossip_mix(
         if active is not None:
             # jnp.where, not arithmetic blending: inactive rows stay
             # bit-exact even if the gathered params carry NaN/Inf
+            a = (active > 0).reshape(active.shape + (1,) * (flat.ndim - active.ndim))
+            out = jnp.where(a, out, flat.astype(out.dtype))
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(leaf, stacked_params)
+
+
+def sharded_gossip_mix_sparse(
+    stacked_params: PyTree,
+    idx: jnp.ndarray,
+    wgt: jnp.ndarray,
+    active: jnp.ndarray | None = None,
+    *,
+    mesh: Mesh | None = None,
+    node_axes: tuple[str, ...] | None = None,
+    grid_axis: str | None = None,
+) -> PyTree:
+    """Sharded gossip from a neighbor table — ``gossip_repr="sparse"``
+    sibling of :func:`sharded_gossip_mix` (same contract, the (N, N)
+    matrix replaced by ``core.topology.neighbor_table``'s (N, B+1)
+    ``(idx, wgt)``).
+
+    Each device holds N/shards table rows next to its parameter rows;
+    the node axis is all-gathered once per leaf (the existing collective)
+    and each local row gathers just its B+1 referenced rows
+    (``sparse_gossip_shard``) — per-device cost O(N/shards · B · D)
+    instead of the dense O(N/shards · N · D), with no (N, N) operand
+    anywhere.  The gathered (N, D) temp remains, as in the dense
+    allgather impl; federations too big for it should shrink D per call
+    (leaf-wise mixing already does) before reaching for psum-style
+    scatters.
+
+    Grid batching works exactly as in the dense sibling: grid-stacked
+    ``(G, N, B+1)`` tables + a ``("grid", "node")`` mesh are auto-detected
+    (table 3-D + ``"grid"`` axis present) or forced via ``grid_axis=``.
+    """
+    if mesh is None:
+        mesh = _default_federation_mesh(idx.shape[-2])
+    axes = node_axes or tuple(
+        a for a in mesh.axis_names if a not in ("model", "grid")
+    )
+    axis = axes if len(axes) > 1 else axes[0]
+    if grid_axis is None and idx.ndim == 3 and "grid" in mesh.axis_names:
+        grid_axis = "grid"
+    g = (grid_axis,) if grid_axis else ()
+    lead = 1 + len(g)  # stacked leading dims: [grid,] node
+    if idx.ndim != 1 + lead:
+        raise ValueError(
+            f"neighbor table must be {1 + lead}-D "
+            f"({'(G, N, B+1)' if g else '(N, B+1)'}) for grid_axis={grid_axis!r}, "
+            f"got shape {idx.shape}"
+        )
+    if idx.shape != wgt.shape:
+        raise ValueError(f"idx {idx.shape} != wgt {wgt.shape}")
+
+    def leaf(l):
+        flat = l.reshape(l.shape[:lead] + (-1,))
+        if flat.shape[0] != idx.shape[0]:
+            raise ValueError(
+                f"stacked leading dim {flat.shape[0]} != neighbor-table "
+                f"leading dim {idx.shape[0]} (leaf {l.shape}, idx {idx.shape})"
+            )
+        # check_vma=False: under the swept engine's
+        # ``vmap(..., spmd_axis_name="grid")`` the gather's index
+        # clamping compares grid-varying indices against replicated
+        # bounds, which the replication checker rejects even though the
+        # grid axis purely batches here (no collective crosses it)
+        out = _shard_map(
+            partial(sparse_gossip_shard, axis=axis),
+            mesh=mesh,
+            in_specs=(P(*g, axes), P(*g, axes, None), P(*g, axes, None)),
+            out_specs=P(*g, axes),
+            check_vma=False,
+        )(flat, idx.astype(jnp.int32), wgt.astype(jnp.float32))
+        if active is not None:
             a = (active > 0).reshape(active.shape + (1,) * (flat.ndim - active.ndim))
             out = jnp.where(a, out, flat.astype(out.dtype))
         return out.reshape(l.shape).astype(l.dtype)

@@ -54,6 +54,17 @@ multi-round engine a compiler problem rather than a host loop:
         node-sharded mesh (``launch.mesh.make_federation_mesh``): the N
         federation rows split across devices and the mix runs as a real
         collective — the fleet-scale path, and it scans like the rest.
+  * **Gossip representation** — orthogonal to the mixer,
+    ``gossip_repr`` picks the mixing operator's storage: ``"dense"``
+    contracts the (N, N) ``topology.mixing_matrix``; ``"sparse"`` uses
+    the (N, B+1) neighbor table (``topology.neighbor_table``) whose
+    densification is bitwise the same matrix, cutting the contraction
+    from O(N²·D) to O(N·B·D).  Static topologies build the table from
+    host-side candidate lists so no (N, N) array exists anywhere —
+    federations of 10k+ nodes train where the dense path OOMs
+    (``sparse-gossip-10k`` bench row).  ``"auto"`` defers to
+    ``launch.mesh.choose_gossip_repr`` (sparse once B+1 ≪ N).  Every
+    mixer has a sparse twin, including the fused DP kernel.
 
 All RNG is threaded through ``FLState.key`` so every engine/mixer
 combination consumes the identical key stream: ``train_chunk(chunk=k)``
@@ -101,11 +112,18 @@ from repro.core.async_sched import bernoulli_active, staleness_update
 from repro.core.gossip import (
     gossip_mix_dp_kernel,
     gossip_mix_kernel,
+    gossip_mix_sparse_dp_kernel,
+    gossip_mix_sparse_kernel,
+    gossip_mix_sparse_tree,
     gossip_mix_tree,
     sharded_gossip_mix,
+    sharded_gossip_mix_sparse,
 )
 from repro.core.topology import (
     mixing_matrix,
+    neighbor_candidates,
+    neighbor_table,
+    neighbor_table_from_candidates,
     random_adjacency,
     round_adjacency,
     stacked_adjacency,
@@ -229,6 +247,7 @@ class GluADFL:
         use_kernel: bool = False,
         mixer: str | None = None,
         gossip_impl: str = "allgather",
+        gossip_repr: str = "dense",
         dp_noise_sigma: float = 0.0,
         loss_fn: Callable | None = None,
         mesh=None,
@@ -241,10 +260,18 @@ class GluADFL:
                 f"use_kernel=True contradicts mixer={mixer!r}; pass one or the other"
             )
         assert mixer in MIXERS, f"mixer {mixer!r} not in {MIXERS}"
-        from repro.core.distributed import GOSSIP_IMPLS
+        from repro.core.distributed import GOSSIP_IMPLS, GOSSIP_REPRS
 
         if gossip_impl not in GOSSIP_IMPLS:
             raise ValueError(f"gossip_impl {gossip_impl!r} not in {GOSSIP_IMPLS}")
+        if gossip_repr == "auto":
+            from repro.launch.mesh import choose_gossip_repr
+
+            gossip_repr = choose_gossip_repr(cfg.num_nodes, cfg.comm_batch)
+        if gossip_repr not in GOSSIP_REPRS:
+            raise ValueError(
+                f"gossip_repr {gossip_repr!r} not in {GOSSIP_REPRS + ('auto',)}"
+            )
         self.model = model
         self.optimizer = optimizer
         self.cfg = cfg
@@ -252,6 +279,16 @@ class GluADFL:
         self.mixer = mixer
         self.use_kernel = mixer == "kernel"  # kept for back-compat introspection
         self.gossip_impl = gossip_impl       # sharded-mixer collective schedule
+        self.gossip_repr = gossip_repr       # dense (N,N) matrix vs neighbor table
+        # static-topology candidate lists, host-built once: the sparse
+        # config-driven path builds its (N, B+1) table straight from these
+        # — no (N, N) array ever exists (the population-scale unlock).
+        # None for "random" (per-round graphs go through neighbor_table).
+        self._neighbor_cand = (
+            neighbor_candidates(cfg.topology, cfg.num_nodes, cfg.cluster_size)
+            if gossip_repr == "sparse"
+            else None
+        )
         self.mesh = mesh                     # optional explicit mesh for "sharded"
         # BEYOND-PAPER: local differential privacy on the broadcast —
         # Gaussian noise is added to the parameters a node SHARES (its
@@ -411,11 +448,31 @@ class GluADFL:
         return p, st, jnp.mean(losses)
 
     # ------------------------------------------------------------------
-    def _plain_mix(self, stacked: PyTree, mix: jnp.ndarray, mesh=None) -> PyTree:
-        """Mixer dispatch for the noise-free contraction (the mixing
-        matrix already carries identity rows for inactive nodes).
+    def _mix_repr(self, adj: jnp.ndarray, active) -> Any:
+        """The round's mixing operator in the configured representation:
+        dense (N, N) ``mixing_matrix`` or sparse ``(idx, wgt)``
+        neighbor table (densifying the latter reproduces the former
+        bitwise)."""
+        if self.gossip_repr == "sparse":
+            return neighbor_table(adj, active, self.cfg.comm_batch)
+        return mixing_matrix(adj, active, self.cfg.comm_batch)
+
+    def _plain_mix(self, stacked: PyTree, mix: Any, mesh=None, active=None) -> PyTree:
+        """Mixer dispatch for the noise-free contraction.  ``mix`` is the
+        dense matrix or the sparse ``(idx, wgt)`` table per
+        ``gossip_repr``; dense identity rows already encode inactivity,
+        the sparse paths take ``active`` for a bit-exact where-select.
         ``mesh`` overrides ``self.mesh`` for the sharded mixer — the
         swept-sharded path threads its 2-D (grid, node) mesh down here."""
+        if self.gossip_repr == "sparse":
+            idx, wgt = mix
+            if self.mixer == "kernel":
+                return gossip_mix_sparse_kernel(stacked, idx, wgt, active)
+            if self.mixer == "sharded":
+                return sharded_gossip_mix_sparse(
+                    stacked, idx, wgt, active, mesh=mesh or self.mesh
+                )
+            return gossip_mix_sparse_tree(stacked, idx, wgt, active)
         if self.mixer == "kernel":
             return gossip_mix_kernel(stacked, mix)
         if self.mixer == "sharded":
@@ -424,10 +481,10 @@ class GluADFL:
             )
         return gossip_mix_tree(stacked, mix)
 
-    def _gossip(self, premix: PyTree, mix: jnp.ndarray, active, k_dp, mesh=None) -> PyTree:
+    def _gossip(self, premix: PyTree, mix: Any, active, k_dp, mesh=None) -> PyTree:
         """Steps 2+3 (+ optional local-DP broadcast noise)."""
         if self.dp_noise_sigma <= 0.0:
-            return self._plain_mix(premix, mix, mesh)
+            return self._plain_mix(premix, mix, mesh, active)
         noise_keys = split_like(k_dp, premix)
         noise = jax.tree.map(
             lambda w, k_: self.dp_noise_sigma * jax.random.normal(k_, w.shape, w.dtype),
@@ -435,11 +492,28 @@ class GluADFL:
         )
         if self.mixer == "kernel":
             # fused: noise + mix + clean-self-restore, one kernel pass
+            if self.gossip_repr == "sparse":
+                idx, wgt = mix
+                return gossip_mix_sparse_dp_kernel(premix, noise, idx, wgt, active)
             return gossip_mix_dp_kernel(premix, noise, mix, active)
         # composed: neighbours mix the NOISED view; each node re-adds its
         # own clean self-contribution (it never needs to noise itself)
         shared = jax.tree.map(jnp.add, premix, noise)
-        mixed_noisy = self._plain_mix(shared, mix, mesh)
+        mixed_noisy = self._plain_mix(shared, mix, mesh, active)
+        if self.gossip_repr == "sparse":
+            # slot 0 is always self: wgt[:, 0] IS the densified diagonal.
+            # _plain_mix already where-selected inactive rows back to the
+            # noised view, so restore them to the clean premix here too.
+            self_w = mix[1][:, 0]
+            out = jax.tree.map(
+                lambda mn, z: mn - self_w.reshape((-1,) + (1,) * (z.ndim - 1)) * z,
+                mixed_noisy, noise,
+            )
+            a = active > 0
+            return jax.tree.map(
+                lambda o, p: jnp.where(a.reshape((-1,) + (1,) * (o.ndim - 1)), o, p),
+                out, premix,
+            )
         self_w = jnp.diagonal(mix)  # (N,)
         return jax.tree.map(
             lambda mn, z: mn - self_w.reshape((-1,) + (1,) * (z.ndim - 1)) * z,
@@ -550,9 +624,18 @@ class GluADFL:
 
         if scenario is None:
             active = bernoulli_active(k_act, n, cfg.inactive_ratio)
-            adj = round_adjacency(
-                cfg.topology, n, k_top, cfg.comm_batch, cfg.cluster_size
-            )
+            if self._neighbor_cand is not None:
+                # sparse static topology: table straight from the host-
+                # built candidate lists — no (N, N) array in the program
+                cand_idx, cand_valid = self._neighbor_cand
+                mix = neighbor_table_from_candidates(
+                    cand_idx, cand_valid, active, cfg.comm_batch
+                )
+            else:
+                adj = round_adjacency(
+                    cfg.topology, n, k_top, cfg.comm_batch, cfg.cluster_size
+                )
+                mix = self._mix_repr(adj, active)
         else:
             adj_static, resample, inactive_ratio = scenario
             active = bernoulli_active(k_act, n, inactive_ratio)
@@ -564,7 +647,7 @@ class GluADFL:
                 random_adjacency(k_top, n, min(cfg.comm_batch, n - 1)),
                 adj_static,
             )
-        mix = mixing_matrix(adj, active, cfg.comm_batch)
+            mix = self._mix_repr(adj, active)
 
         premix = state.params
         k_dp = None

@@ -9,6 +9,11 @@ Three interchangeable implementations:
   * ``gossip_mix_kernel``  — Pallas blocked kernel (repro.kernels),
   * ``sharded_gossip_mix`` — shard_map over a node-sharded axis
                              (repro.core.distributed) for fleet scale.
+
+Each has a ``*_sparse`` twin taking ``core.topology.neighbor_table``'s
+(N, B+1) ``(idx, wgt)`` representation instead of the dense (N, N)
+matrix — same math to float tolerance (bitwise for inactive rows, which
+take a where-select copy), O(N·B·D) instead of O(N²·D).
 """
 from __future__ import annotations
 
@@ -66,3 +71,73 @@ def sharded_gossip_mix(stacked_params: PyTree, mix: jnp.ndarray, active=None, **
     from repro.core.distributed import sharded_gossip_mix as _sharded
 
     return _sharded(stacked_params, mix, active, **kw)
+
+
+def gossip_mix_sparse_tree(
+    stacked_params: PyTree, idx: jnp.ndarray, wgt: jnp.ndarray, active=None
+) -> PyTree:
+    """Sparse reference implementation: gather the B+1 referenced rows
+    per output row and weight-sum them — ``out[n] = Σ_b wgt[n,b] ·
+    w[idx[n,b]]``.  With ``active`` given, inactive rows take a
+    where-select copy (bit-exact even against NaN/Inf in active rows);
+    without it the table's identity rows (wgt ``[1, 0, ...]``) already
+    make them float-exact copies."""
+    import jax
+
+    def mix_leaf(l):
+        flat = l.reshape(l.shape[0], -1).astype(jnp.float32)
+        out = jnp.einsum("nb,nbd->nd", wgt.astype(jnp.float32), flat[idx])
+        if active is not None:
+            out = jnp.where((active > 0)[:, None], out, flat)
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(mix_leaf, stacked_params)
+
+
+def gossip_mix_sparse_kernel(
+    stacked_params: PyTree, idx: jnp.ndarray, wgt: jnp.ndarray, active=None
+) -> PyTree:
+    """Pallas sparse gather-mix per leaf (repro.kernels.ops)."""
+    from repro.kernels.ops import gossip_mix_sparse as _kernel_sparse
+
+    import jax
+
+    def mix_leaf(l):
+        flat = l.reshape(l.shape[0], -1)
+        out = _kernel_sparse(idx, wgt, flat, active)
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(mix_leaf, stacked_params)
+
+
+def gossip_mix_sparse_dp_kernel(
+    stacked_params: PyTree,
+    noise: PyTree,
+    idx: jnp.ndarray,
+    wgt: jnp.ndarray,
+    active=None,
+) -> PyTree:
+    """Fused sparse local-DP gossip (Pallas): noised-neighbour gather +
+    clean-self-restore in one pass per leaf — ``out[n] = Σ_b
+    wgt[n,b]·(w+z)[idx[n,b]] − wgt[n,0]·z[n]`` (slot 0 is self, so
+    ``wgt[:, 0]`` IS the densified diagonal)."""
+    from repro.kernels.ops import gossip_mix_sparse_dp as _kernel_dp
+
+    import jax
+
+    def mix_leaf(l, z):
+        flat = l.reshape(l.shape[0], -1)
+        out = _kernel_dp(idx, wgt, flat, z.reshape(z.shape[0], -1), active)
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(mix_leaf, stacked_params, noise)
+
+
+def sharded_gossip_mix_sparse(
+    stacked_params: PyTree, idx: jnp.ndarray, wgt: jnp.ndarray, active=None, **kw
+) -> PyTree:
+    """Device-parallel sparse implementation (re-export; see
+    :func:`repro.core.distributed.sharded_gossip_mix_sparse`)."""
+    from repro.core.distributed import sharded_gossip_mix_sparse as _sharded
+
+    return _sharded(stacked_params, idx, wgt, active, **kw)

@@ -81,9 +81,7 @@ def gossip_mix_params(
             # node id along the (possibly compound) axis
             idx = jax.lax.axis_index(axis)
             # contribution of THIS node to everyone: w * M[:, idx]
-            col = jax.lax.dynamic_slice_in_dim(mix_local, 0, mix_local.shape[0], 0)[
-                :, idx
-            ]
+            col = mix_local[:, idx]
             contrib = w_local[None, ...] * col.reshape((-1,) + (1,) * w_local.ndim)
             if impl == "psum":
                 # reduce-scatter along the stacked node dim: with one node
@@ -130,7 +128,15 @@ def ring_mix_params(params: PyTree, mesh: Mesh, node_axes: tuple[str, ...],
         spec = spec if spec is not None else P(*(None,) * w.ndim)
 
         def body(w_local):
+            if n <= 1:
+                return w_local
             w_prev = jax.lax.ppermute(w_local, axis, fwd)
+            if n == 2:
+                # fwd and bwd would deliver the SAME single peer — the
+                # three-way average would weight it 2/3 instead of the
+                # uniform 1/2 over {self, peer} that
+                # mixing_matrix(ring_adjacency(2), ...) produces
+                return (w_local + w_prev) / 2.0
             w_next = jax.lax.ppermute(w_local, axis, bwd)
             return (w_local + w_prev + w_next) / 3.0
 
@@ -143,6 +149,12 @@ def ring_mix_params(params: PyTree, mesh: Mesh, node_axes: tuple[str, ...],
         s_leaves = [None] * len(p_leaves)
     else:
         s_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        if len(s_leaves) != len(p_leaves):
+            raise ValueError(
+                f"specs tree has {len(s_leaves)} leaves but params has "
+                f"{len(p_leaves)} — a zip would silently truncate; pass "
+                f"one PartitionSpec per parameter leaf"
+            )
     return jax.tree.unflatten(
         treedef, [leaf(w, s) for w, s in zip(p_leaves, s_leaves)]
     )

@@ -10,6 +10,18 @@ row-stochastic mixing matrix M_t of Algorithm 1 lines 7-9:
 ``mixing_matrix`` is pure-jnp so whole FL rounds jit/scan; the static
 topologies (ring, cluster, star, full) are constants, the random topology
 re-samples each round from a PRNG key.
+
+Because each row of M_t has at most ``comm_batch + 1`` nonzeros, the
+dense (N, N) matrix is pure waste at population scale.  The sparse
+*neighbor table* twin — :func:`neighbor_table` and friends — represents
+the same M_t as ``(idx, wgt)`` arrays of shape (N, B+1): slot 0 is
+always self, slots 1..B hold the kept active neighbours in ascending
+column order, and padding slots point back at self with weight 0.
+:func:`densify_neighbor_table` recovers the dense matrix bitwise, which
+is the contract every sparse consumer is tested against.
+:func:`neighbor_candidates` builds static per-node candidate lists on
+the host so ring/cluster/star federations never materialize an (N, N)
+array at all — the O(N·B) path to population-scale N.
 """
 from __future__ import annotations
 
@@ -165,6 +177,138 @@ def mixing_matrix_stacked(
     return jax.vmap(mixing_matrix, in_axes=(0, 0, None))(
         adjacency, active, comm_batch
     )
+
+
+def neighbor_table_from_candidates(
+    cand_idx: jnp.ndarray,
+    cand_valid: jnp.ndarray,
+    active: jnp.ndarray,
+    comm_batch: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse mixing rows from per-node candidate lists.
+
+    ``cand_idx`` (N, C) int: each row's potential neighbours in ASCENDING
+    column order; ``cand_valid`` (N, C) {0,1} masks padding slots (their
+    ``cand_idx`` values are ignored).  Applies exactly the
+    :func:`mixing_matrix` semantics — keep the ``comm_batch`` lowest-index
+    ACTIVE candidates, uniform 1/(deg+1) weights, identity rows for
+    inactive nodes — and returns ``(idx, wgt)`` of shape
+    (N, min(comm_batch, C) + 1):
+
+      * slot 0 is always self: weight ``1/denom`` (active) or 1.0
+        (inactive, making the row an identity row);
+      * slots 1.. hold the kept neighbours with weight ``1/denom``;
+      * unused slots have ``idx == row`` and ``wgt == 0`` so gathers stay
+        in-bounds and contribute nothing.
+
+    Densifying (:func:`densify_neighbor_table`) reproduces
+    ``mixing_matrix`` bitwise: both divide the same 1.0 by the same
+    denominator.  Cost is O(N·C) — with host-built candidate lists
+    (:func:`neighbor_candidates`) no (N, N) array ever exists.
+    """
+    n, c = cand_idx.shape
+    b = int(min(comm_batch, c))
+    act = active.astype(jnp.float32)
+    self_idx = jnp.arange(n, dtype=jnp.int32)
+    # candidates that are valid AND active; cap by cumulative count keeps
+    # the B lowest-index survivors (same csum rule as mixing_matrix)
+    avail = cand_valid.astype(jnp.float32) * act[cand_idx]
+    csum = jnp.cumsum(avail, axis=1)
+    keep = avail * (csum <= comm_batch)
+    denom = 1.0 + jnp.sum(keep, axis=1)  # (N,) — self + kept neighbours
+    if b > 0:
+        # compact the kept slots to the front, preserving ascending order:
+        # top_k of -position over kept slots returns positions ascending
+        score = jnp.where(keep > 0, -jnp.arange(c, dtype=jnp.float32), -jnp.inf)
+        _, pos = jax.lax.top_k(score, b)
+        sel_keep = jnp.take_along_axis(keep, pos, axis=1)
+        sel_idx = jnp.take_along_axis(cand_idx.astype(jnp.int32), pos, axis=1)
+        nb_wgt = act[:, None] * sel_keep / denom[:, None]
+    else:
+        sel_idx = jnp.zeros((n, 0), jnp.int32)
+        nb_wgt = jnp.zeros((n, 0), jnp.float32)
+    self_wgt = jnp.where(act > 0, 1.0 / denom, 1.0)
+    idx = jnp.concatenate([self_idx[:, None], sel_idx], axis=1)
+    wgt = jnp.concatenate([self_wgt[:, None], nb_wgt], axis=1)
+    # zero-weight slots point at self: gathers stay in-bounds, 0·w[n] adds
+    # nothing, and garbage candidate padding never leaks through
+    idx = jnp.where(wgt > 0, idx, self_idx[:, None])
+    return idx, wgt
+
+
+def neighbor_table(
+    adjacency: jnp.ndarray, active: jnp.ndarray, comm_batch: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse twin of :func:`mixing_matrix`: same (adjacency, active,
+    comm_batch) inputs, ``(idx, wgt)`` of shape (N, min(B, N)+1) out,
+    with ``densify_neighbor_table(idx, wgt) == mixing_matrix(...)``
+    bitwise.  O(N²) build (it reads the dense adjacency) but the
+    downstream contraction drops to O(N·B·D); use
+    :func:`neighbor_candidates` to skip the dense build for static
+    topologies."""
+    n = adjacency.shape[0]
+    cand_idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (n, n))
+    return neighbor_table_from_candidates(
+        cand_idx, adjacency.astype(jnp.float32), active, comm_batch
+    )
+
+
+def stacked_neighbor_table(
+    adjacency: jnp.ndarray, active: jnp.ndarray, comm_batch: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched :func:`neighbor_table` for the sweep grid: ``(G, N, N)``
+    adjacencies + ``(G, N)`` masks in, ``(G, N, B+1)`` tables out —
+    scenario ``g`` bitwise-identical to the unbatched call."""
+    return jax.vmap(neighbor_table, in_axes=(0, 0, None))(
+        adjacency, active, comm_batch
+    )
+
+
+def neighbor_candidates(
+    topology: str, n: int, cluster_size: int = 4
+) -> tuple[jnp.ndarray, jnp.ndarray] | None:
+    """Host-built static candidate lists ``(cand_idx, cand_valid)`` for
+    :func:`neighbor_table_from_candidates` — ``None`` for ``"random"``
+    (its graph re-draws per round, so the trainer builds a dense
+    adjacency from the round key instead).
+
+    The ring path is direct O(N) (sorted ``{i-1, i+1} mod n``) — the
+    population-scale federations the sparse representation exists for
+    are rings, and this path never allocates an (N, N) array.  The other
+    static topologies go through :func:`static_adjacency` once at trainer
+    construction (host numpy, outside jit) and pad each row's nonzero
+    columns to the max degree."""
+    if topology == "random":
+        return None
+    if topology == "ring":
+        if n <= 1:
+            return (jnp.zeros((n, 1), jnp.int32), jnp.zeros((n, 1), jnp.float32))
+        i = np.arange(n)
+        if n == 2:
+            cand = (1 - i)[:, None]
+        else:
+            cand = np.sort(np.stack([(i - 1) % n, (i + 1) % n], axis=1), axis=1)
+        return jnp.asarray(cand, jnp.int32), jnp.ones(cand.shape, jnp.float32)
+    adj = np.asarray(static_adjacency(topology, n, cluster_size))
+    deg = adj.sum(axis=1).astype(int)
+    c = max(1, int(deg.max()))
+    cand = np.zeros((n, c), np.int32)
+    valid = np.zeros((n, c), np.float32)
+    for row in range(n):
+        nz = np.nonzero(adj[row])[0]
+        cand[row, : len(nz)] = nz
+        valid[row, : len(nz)] = 1.0
+    return jnp.asarray(cand), jnp.asarray(valid)
+
+
+def densify_neighbor_table(idx: jnp.ndarray, wgt: jnp.ndarray) -> jnp.ndarray:
+    """Scatter a neighbor table back to the dense (N, N) mixing matrix —
+    the oracle relation every sparse consumer is tested through.  Padding
+    slots scatter-add 0.0 onto the diagonal, which leaves the positive
+    self weight bit-identical."""
+    n = idx.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], idx.shape)
+    return jnp.zeros((n, n), jnp.float32).at[rows, idx].add(wgt)
 
 
 def spectral_gap(mix: jnp.ndarray) -> float:

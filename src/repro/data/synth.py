@@ -84,11 +84,18 @@ def generate_patient_series(
     impulses = np.zeros(n)
     for day in range(days):
         n_meals = max(1, rng.poisson(3))
-        base_times = rng.uniform(0, 1, size=n_meals) if spec.meal_irregularity > 0.8 else (
-            (np.array([0.3, 0.55, 0.8])[:n_meals] if n_meals <= 3
-             else rng.uniform(0.2, 0.9, size=n_meals))
-            + rng.normal(0, 0.03 * spec.meal_irregularity, size=min(n_meals, n_meals))
-        )
+        if spec.meal_irregularity > 0.8:
+            base_times = rng.uniform(0, 1, size=n_meals)
+        elif n_meals <= 3:
+            # the 3-slot template, jittered: min(n_meals, 3) jitter draws
+            base_times = np.array([0.3, 0.55, 0.8])[:n_meals] + rng.normal(
+                0, 0.03 * spec.meal_irregularity, size=min(n_meals, 3)
+            )
+        else:
+            base_times = rng.uniform(0.2, 0.9, size=n_meals) + rng.normal(
+                0, 0.03 * spec.meal_irregularity, size=n_meals
+            )
+        assert base_times.shape == (n_meals,), (base_times.shape, n_meals)
         for bt in np.atleast_1d(base_times):
             idx = int((day + float(np.clip(bt, 0, 0.999))) * SAMPLES_PER_DAY)
             amp = rng.gamma(4.0, 20.0) * (0.7 + 0.6 * spec.meal_irregularity)

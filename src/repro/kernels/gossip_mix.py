@@ -23,6 +23,18 @@ pass: ``out = M @ (W + Z) - diag(M) * Z`` (each node shares a noised
 view but re-adds its own clean self-contribution), so the (N, D) matrix
 is still streamed through VMEM exactly once instead of the three
 tree_map passes the unfused path takes.
+
+Sparse (neighbor-table) twins: ``gossip_mix_sparse_pallas`` /
+``gossip_mix_sparse_dp_pallas`` take the (N, B+1) ``(idx, wgt)`` table
+from ``core.topology.neighbor_table`` instead of the dense matrix and
+compute ``out[n] = Σ_b wgt[n,b] · w[idx[n,b]]`` (DP:
+``Σ_b wgt[n,b]·(w+z)[idx[n,b]] − wgt[n,0]·z[n]``) — O(N·B·D) flops on
+the same one-pass TILE_D streaming layout, with the tiny idx/wgt tables
+replicated to every program like the mix matrix was.  The row gather is
+expressed as ``jnp.take`` inside the kernel body, which the CPU
+interpreter (this repo's test/bench path) executes directly; a compiled
+TPU lowering would route ``idx`` through scalar prefetch
+(``PrefetchScalarGridSpec``) and DMA the rows instead.
 """
 from __future__ import annotations
 
@@ -72,6 +84,103 @@ def gossip_mix_pallas(
         out_shape=jax.ShapeDtypeStruct((n, d), w.dtype),
         interpret=interpret,
     )(mix.astype(jnp.float32), w, act2)
+
+
+def _sparse_kernel(idx_ref, wgt_ref, w_ref, act_ref, out_ref):
+    idx = idx_ref[...]                              # (N, B1) i32, replicated
+    wgt = wgt_ref[...]                              # (N, B1) f32, replicated
+    w = w_ref[...].astype(jnp.float32)              # (N, TILE_D)
+    act = act_ref[...]                              # (N, 1)
+    n, b1 = idx.shape
+    rows = jnp.take(w, idx.reshape(-1), axis=0).reshape(n, b1, -1)
+    mixed = jnp.einsum("nb,nbd->nd", wgt, rows)
+    out = jnp.where(act > 0, mixed, w)  # bit-exact inactive copies
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix_sparse_pallas(
+    idx: jnp.ndarray,
+    wgt: jnp.ndarray,
+    w: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Sparse gather-mix: idx/wgt (N, B+1) neighbor table, w (N, D),
+    active (N,) -> (N, D).  D % TILE_D == 0 (ops.py pads)."""
+    n, d = w.shape
+    b1 = idx.shape[1]
+    assert d % TILE_D == 0, d
+    assert idx.shape == wgt.shape == (n, b1), (idx.shape, wgt.shape, w.shape)
+    grid = (d // TILE_D,)
+    act2 = active.astype(jnp.float32).reshape(n, 1)
+    return pl.pallas_call(
+        _sparse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, b1), lambda j: (0, 0)),
+            pl.BlockSpec((n, b1), lambda j: (0, 0)),
+            pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), w.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), wgt.astype(jnp.float32), w, act2)
+
+
+def _sparse_dp_kernel(idx_ref, wgt_ref, w_ref, noise_ref, act_ref, out_ref):
+    idx = idx_ref[...]                              # (N, B1) i32, replicated
+    wgt = wgt_ref[...]                              # (N, B1) f32, replicated
+    w = w_ref[...].astype(jnp.float32)              # (N, TILE_D)
+    noise = noise_ref[...].astype(jnp.float32)      # (N, TILE_D)
+    act = act_ref[...]                              # (N, 1)
+    n, b1 = idx.shape
+    shared = w + noise
+    rows = jnp.take(shared, idx.reshape(-1), axis=0).reshape(n, b1, -1)
+    mixed = jnp.einsum("nb,nbd->nd", wgt, rows)
+    # slot 0 is always self: wgt[:, :1] is the densified diagonal
+    out = mixed - wgt[:, :1] * noise                # clean-self-restore
+    out = jnp.where(act > 0, out, w)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix_sparse_dp_pallas(
+    idx: jnp.ndarray,
+    wgt: jnp.ndarray,
+    w: jnp.ndarray,
+    noise: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused sparse local-DP gossip:
+    ``out[n] = Σ_b wgt[n,b]·(w+z)[idx[n,b]] − wgt[n,0]·z[n]`` with the
+    active-mask select, one VMEM pass.  Shapes as
+    ``gossip_mix_sparse_pallas`` plus noise (N, D)."""
+    n, d = w.shape
+    b1 = idx.shape[1]
+    assert d % TILE_D == 0, d
+    assert noise.shape == w.shape, (noise.shape, w.shape)
+    assert idx.shape == wgt.shape == (n, b1), (idx.shape, wgt.shape, w.shape)
+    grid = (d // TILE_D,)
+    act2 = active.astype(jnp.float32).reshape(n, 1)
+    return pl.pallas_call(
+        _sparse_dp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, b1), lambda j: (0, 0)),
+            pl.BlockSpec((n, b1), lambda j: (0, 0)),
+            pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, TILE_D), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), w.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), wgt.astype(jnp.float32), w, noise.astype(w.dtype), act2)
 
 
 def _dp_kernel(mix_ref, w_ref, noise_ref, self_w_ref, act_ref, out_ref):

@@ -6,7 +6,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gossip_mix import TILE_D, gossip_mix_dp_pallas, gossip_mix_pallas
+from repro.kernels.gossip_mix import (
+    TILE_D,
+    gossip_mix_dp_pallas,
+    gossip_mix_pallas,
+    gossip_mix_sparse_dp_pallas,
+    gossip_mix_sparse_pallas,
+)
 from repro.kernels.lstm_cell import TILE_B, TILE_H, lstm_cell_pallas
 from repro.kernels.swa_attention import TILE_Q, swa_attention_pallas
 
@@ -58,6 +64,53 @@ def gossip_mix_dp(mix: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray, active=N
     mp = _pad_to(_pad_to(mix, 0, 8), 1, 8)
     ap = _pad_to(active.astype(jnp.float32), 0, 8)
     out = gossip_mix_dp_pallas(mp, wp, zp, ap, interpret=not _on_tpu())
+    return out[:n, :d]
+
+
+def gossip_mix_sparse(
+    idx: jnp.ndarray, wgt: jnp.ndarray, w: jnp.ndarray, active=None
+) -> jnp.ndarray:
+    """Sparse gather-mix ``out[n] = Σ_b wgt[n,b] · w[idx[n,b]]`` from a
+    ``core.topology.neighbor_table`` — O(N·B·D) instead of the dense
+    kernel's O(N²·D).
+
+    idx/wgt (N, B+1), w (N, D), active optional (N,).  Pads N to the
+    8-sublane multiple (padded table rows gather row 0 with weight 0 and
+    an inactive mask, so they copy their zero padding through) and D to
+    TILE_D; interpret on CPU, compiled on TPU.
+    """
+    n, d = w.shape
+    if active is None:
+        active = jnp.ones((n,), jnp.float32)
+    wp = _pad_to(_pad_to(w, 0, 8), 1, TILE_D)
+    ip = _pad_to(idx.astype(jnp.int32), 0, 8)  # pad rows: idx 0 (in bounds)
+    gp = _pad_to(wgt.astype(jnp.float32), 0, 8)  # pad rows: weight 0
+    ap = _pad_to(active.astype(jnp.float32), 0, 8)  # pad rows: inactive
+    out = gossip_mix_sparse_pallas(ip, gp, wp, ap, interpret=not _on_tpu())
+    return out[:n, :d]
+
+
+def gossip_mix_sparse_dp(
+    idx: jnp.ndarray,
+    wgt: jnp.ndarray,
+    w: jnp.ndarray,
+    noise: jnp.ndarray,
+    active=None,
+) -> jnp.ndarray:
+    """Fused sparse local-DP gossip
+    ``out[n] = Σ_b wgt[n,b]·(w+z)[idx[n,b]] − wgt[n,0]·z[n]`` with the
+    active-mask select (inactive rows bit-exact copies of ``w``).  Same
+    shapes/padding/dispatch as :func:`gossip_mix_sparse` plus noise (N, D).
+    """
+    n, d = w.shape
+    if active is None:
+        active = jnp.ones((n,), jnp.float32)
+    wp = _pad_to(_pad_to(w, 0, 8), 1, TILE_D)
+    zp = _pad_to(_pad_to(noise, 0, 8), 1, TILE_D)
+    ip = _pad_to(idx.astype(jnp.int32), 0, 8)
+    gp = _pad_to(wgt.astype(jnp.float32), 0, 8)
+    ap = _pad_to(active.astype(jnp.float32), 0, 8)
+    out = gossip_mix_sparse_dp_pallas(ip, gp, wp, zp, ap, interpret=not _on_tpu())
     return out[:n, :d]
 
 

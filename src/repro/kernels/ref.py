@@ -31,6 +31,43 @@ def gossip_mix_dp_ref(mix: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray, acti
     return out.astype(w.dtype)
 
 
+def _densify(idx: jnp.ndarray, wgt: jnp.ndarray) -> jnp.ndarray:
+    """Neighbor table (N, B+1) -> dense (N, N) mixing matrix (padding
+    slots scatter-add 0.0, a no-op)."""
+    n = idx.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], idx.shape)
+    return jnp.zeros((n, n), jnp.float32).at[rows, idx].add(
+        wgt.astype(jnp.float32)
+    )
+
+
+def gossip_mix_sparse_ref(
+    idx: jnp.ndarray, wgt: jnp.ndarray, w: jnp.ndarray, active=None
+) -> jnp.ndarray:
+    """Dense oracle for the sparse gather-mix kernel: densify the
+    neighbor table and run :func:`gossip_mix_ref` — the sparse kernel is
+    correct iff it matches this on every table the builders emit.
+
+    idx/wgt: (N, B+1) neighbor table (slot 0 self, padding idx=self
+    wgt=0); w: (N, D); active: optional (N,) {0,1}.
+    """
+    return gossip_mix_ref(_densify(idx, wgt), w, active)
+
+
+def gossip_mix_sparse_dp_ref(
+    idx: jnp.ndarray,
+    wgt: jnp.ndarray,
+    w: jnp.ndarray,
+    noise: jnp.ndarray,
+    active=None,
+) -> jnp.ndarray:
+    """Dense oracle for the fused sparse DP gather-mix:
+    ``out[n] = Σ_b wgt[n,b]·(w[idx[n,b]] + z[idx[n,b]]) − wgt[n,0]·z[n]``
+    via densify + :func:`gossip_mix_dp_ref` (the densified diagonal IS
+    the slot-0 self weight)."""
+    return gossip_mix_dp_ref(_densify(idx, wgt), w, noise, active)
+
+
 def lstm_cell_ref(x_t, h, c, wx, wh, b):
     """Fused LSTM cell (gates i, f, g, o).  Shapes:
     x_t (B, I), h/c (B, H), wx (I, 4H), wh (H, 4H), b (4H,)."""

@@ -140,6 +140,28 @@ def choose_gossip_impl(
     return "allgather" if gathered <= budget_bytes else "psum"
 
 
+# sparse tables win once the kept row (B+1 entries) is a small fraction
+# of N; 4x covers the gather/top_k bookkeeping the dense matmul doesn't pay
+SPARSE_GOSSIP_FACTOR = 4
+
+
+def choose_gossip_repr(
+    num_nodes: int, comm_batch: int, *, factor: int = SPARSE_GOSSIP_FACTOR
+) -> str:
+    """Mixing-operator representation selection (``--gossip-repr auto``).
+
+    Every mixing row has at most ``comm_batch + 1`` nonzeros (Algorithm 1
+    caps each node at B neighbours), so the dense (N, N) matrix carries
+    ``N / (B+1)``-fold pure waste.  Pick the sparse neighbor table
+    (``core.topology.neighbor_table``) once ``B+1 ≪ N`` — concretely
+    ``num_nodes >= factor * (comm_batch + 1)`` — and keep the dense
+    matrix for small federations where the one-matmul contraction is
+    simpler than the gather and the waste is noise.  At the paper's
+    N=226 / B=7 this picks sparse (226 >= 32); a 16-node smoke test
+    stays dense."""
+    return "sparse" if num_nodes >= factor * (comm_batch + 1) else "dense"
+
+
 def make_gossip_dp_mesh(*, nodes: int = 4, multi_pod: bool = False):
     """Mesh view for gossip data-parallelism (DESIGN.md §4): the data
     axis is split into (node, data) so each federated node is a

@@ -57,6 +57,15 @@ Gossip impl (``--mixer sharded`` only)
   * ``--gossip-impl auto``      — pick by the per-device memory the
     gathered federation would need (``launch.mesh.choose_gossip_impl``).
 
+Gossip representation (any mixer)
+---------------------------------
+``--gossip-repr dense|sparse|auto`` picks the mixing operator's storage:
+the dense (N, N) ``mixing_matrix`` or the (N, B+1) neighbor table
+(O(N·B·D) contraction, no (N, N) array for static topologies — the
+population-scale path).  ``auto`` (default) goes sparse once
+``B+1 ≪ N`` (``launch.mesh.choose_gossip_repr``): sparse at the paper's
+N=226, dense on small smoke runs.
+
 Multi-host bootstrap (``--num-processes > 1``)
 ----------------------------------------------
 Launch the SAME command on every host, varying only the process id::
@@ -171,6 +180,12 @@ def main():
                          "(per-device O(N*D) gather), psum "
                          "(reduce-scatter, per-device O(N/shards*D)), "
                          "or auto (memory-based choice)")
+    ap.add_argument("--gossip-repr", default="auto",
+                    choices=["dense", "sparse", "auto"],
+                    help="mixing-operator representation: dense (N, N) "
+                         "matrix, sparse (N, B+1) neighbor table "
+                         "(O(N*B) mixing — population scale), or auto "
+                         "(sparse once B+1 << N)")
     ap.add_argument("--coordinator", default=None,
                     help="jax.distributed coordinator host:port (or env "
                          "REPRO_COORDINATOR); only with --num-processes > 1")
@@ -271,9 +286,17 @@ def main():
             gossip_impl = choose_gossip_impl(fed.num_nodes, node_bytes)
         print(f"gossip-impl auto -> {gossip_impl}")
 
+    gossip_repr = args.gossip_repr
+    if gossip_repr == "auto":
+        from repro.launch.mesh import choose_gossip_repr
+
+        gossip_repr = choose_gossip_repr(fed.num_nodes, fl_cfg.comm_batch)
+        print(f"gossip-repr auto -> {gossip_repr}")
+
     trainer = GluADFL(model, get_optimizer(cfg.train.optimizer, cfg.train.lr),
                       fl_cfg, use_kernel=args.use_kernel, mixer=args.mixer,
-                      gossip_impl=gossip_impl, mesh=sweep_mesh)
+                      gossip_impl=gossip_impl, gossip_repr=gossip_repr,
+                      mesh=sweep_mesh)
 
     # pre-batched validation set for the in-scan streaming eval: a capped
     # slice of every patient's val windows (one fixed array -> scan const)

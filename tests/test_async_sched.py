@@ -74,6 +74,32 @@ def test_markov_extreme_stickiness():
     np.testing.assert_array_equal(np.asarray(frozen), np.asarray(prev))
 
 
+def test_markov_escapes_all_inactive_absorbing_state():
+    """The all-busy state must not absorb the federation: from
+    prev=zeros with p_stay_inactive=1 the raw draw activates NOBODY
+    (u < 0 never fires), which pre-fix made every later round a silent
+    global no-op.  The >=1-active fallback flips exactly one node on."""
+    n = 32
+    prev = jnp.zeros((n,), jnp.float32)
+    nxt = markov_active(jax.random.PRNGKey(0), prev,
+                        p_stay_active=0.9, p_stay_inactive=1.0)
+    assert float(nxt.sum()) == 1.0, np.asarray(nxt)
+    # and it is not an absorbing one-node orbit: the chain keeps moving
+    nxt2 = markov_active(jax.random.PRNGKey(1), nxt,
+                         p_stay_active=0.9, p_stay_inactive=1.0)
+    assert float(nxt2.sum()) >= 1.0
+
+
+def test_markov_always_at_least_one_active():
+    """Across many keys at brutal stickiness, every round has >= 1
+    active node (mirrors the bernoulli guarantee)."""
+    prev = jnp.zeros((16,), jnp.float32)
+    for seed in range(50):
+        nxt = markov_active(jax.random.PRNGKey(seed), prev,
+                            p_stay_active=0.05, p_stay_inactive=0.98)
+        assert float(nxt.sum()) >= 1.0, seed
+
+
 def _markov_chain(n, steps, p_a, p_i, seed=0):
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
     state = jnp.ones((n,), jnp.float32)

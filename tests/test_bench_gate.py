@@ -128,3 +128,60 @@ def test_update_rewrites_baseline(gate, tmp_path):
     assert rc == 0
     rewritten = json.loads((tmp_path / "baseline.json").read_text())
     assert rewritten == fresh
+
+
+# ------------------------------------------------------- sparse-gossip rows
+
+
+SPARSE_BASE = dict(BASE, **{"dense-gossip-n226": 17.0,
+                            "sparse-gossip-n226": 20.0,
+                            "sparse-gossip-10k": 0.4})
+
+
+def _sparse_report(rps, ratio=None, **kw):
+    out = _report(rps, **kw)
+    if ratio is not None:
+        out["sparse_gossip_speedup_vs_dense"] = ratio
+    return out
+
+
+def test_sparse_floor_gate(gate, tmp_path):
+    """sparse/dense >= --sparse-floor (default 0.9, inclusive)."""
+    base = _sparse_report(SPARSE_BASE, 1.2)
+    ok = _run(gate, tmp_path, base, _sparse_report(SPARSE_BASE, 1.1))
+    at = _run(gate, tmp_path, base, _sparse_report(SPARSE_BASE, 0.9))
+    below = _run(gate, tmp_path, base, _sparse_report(SPARSE_BASE, 0.89))
+    assert (ok, at, below) == (0, 0, 1)
+    # the floor is adjustable, same as the eval/sweep floors
+    assert _run(gate, tmp_path, base, _sparse_report(SPARSE_BASE, 0.85),
+                "--sparse-floor", "0.8") == 0
+
+
+def test_sparse_rows_excluded_from_ratio_rule(gate, tmp_path):
+    """The representation pair runs a wider model than the engine rows —
+    its loop ratio is apples-to-oranges, so tanking the raw rows must
+    NOT trip the loop-ratio gate while the same-run floor holds."""
+    fresh = dict(SPARSE_BASE, **{"dense-gossip-n226": 1.0,
+                                 "sparse-gossip-n226": 1.0,
+                                 "sparse-gossip-10k": 0.01})
+    assert _run(gate, tmp_path, _sparse_report(SPARSE_BASE, 1.2),
+                _sparse_report(fresh, 1.0)) == 0
+
+
+def test_missing_sparse_row_fails(gate, tmp_path):
+    """The 10k row silently vanishing = the population-scale path
+    stopped being measured; same for the N=226 pair."""
+    for gone in ("sparse-gossip-10k", "sparse-gossip-n226"):
+        fresh = {k: v for k, v in SPARSE_BASE.items() if k != gone}
+        assert _run(gate, tmp_path, _sparse_report(SPARSE_BASE, 1.2),
+                    _sparse_report(fresh, 1.2)) == 1, gone
+    # old baselines without the rows demand nothing
+    assert _run(gate, tmp_path, _report(BASE),
+                _sparse_report(SPARSE_BASE, 1.2)) == 0
+
+
+def test_baseline_sparse_row_requires_fresh_ratio(gate, tmp_path):
+    """A baseline with the N=226 pair but a fresh run reporting no
+    sparse_gossip_speedup_vs_dense must fail (mirrors the sweep rule)."""
+    assert _run(gate, tmp_path, _sparse_report(SPARSE_BASE, 1.2),
+                _sparse_report(SPARSE_BASE)) == 1

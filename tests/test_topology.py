@@ -6,13 +6,19 @@ import pytest
 
 from repro.core.topology import (
     cluster_adjacency,
+    densify_neighbor_table,
     full_adjacency,
     mixing_matrix,
+    neighbor_candidates,
+    neighbor_table,
+    neighbor_table_from_candidates,
     random_adjacency,
     ring_adjacency,
     round_adjacency,
     spectral_gap,
+    stacked_neighbor_table,
     star_adjacency,
+    static_adjacency,
 )
 
 
@@ -124,3 +130,114 @@ def test_round_adjacency_dispatch():
         assert a.shape == (12, 12)
     with pytest.raises(KeyError):
         round_adjacency("hypercube", 12, k, 7)
+
+
+# ---------------------------------------------------------------------------
+# sparse neighbor tables (the O(N·B) twin of mixing_matrix)
+# ---------------------------------------------------------------------------
+
+
+def _mask(key, n, ratio):
+    if ratio <= 0:
+        return jnp.ones((n,), jnp.float32)
+    m = (jax.random.uniform(key, (n,)) >= ratio).astype(jnp.float32)
+    return m.at[0].set(1.0)  # keep >= 1 active
+
+
+@pytest.mark.parametrize("topology", ["ring", "cluster", "star", "full", "random"])
+@pytest.mark.parametrize("n", [6, 13, 226])
+@pytest.mark.parametrize("ratio", [0.0, 0.4])
+def test_neighbor_table_densifies_to_mixing_matrix(topology, n, ratio):
+    """The sparse table is a REPRESENTATION change, not a semantics
+    change: scattering (idx, wgt) back to (N, N) must reproduce
+    ``mixing_matrix`` BITWISE (same 1/denom divisions, same kept set)."""
+    key = jax.random.PRNGKey(n)
+    adj = round_adjacency(topology, n, key, 7)
+    active = _mask(jax.random.PRNGKey(n + 1), n, ratio)
+    for B in (2, 7):
+        idx, wgt = neighbor_table(adj, active, B)
+        dense = np.asarray(mixing_matrix(adj, active, B))
+        np.testing.assert_array_equal(
+            np.asarray(densify_neighbor_table(idx, wgt)), dense,
+            err_msg=f"{topology} n={n} B={B}",
+        )
+
+
+def test_neighbor_table_structure():
+    """Slot 0 is always self; padding slots point at self with weight 0;
+    inactive rows are exactly (self, 1.0).  From a dense adjacency the
+    width is min(B, N)+1 — the trainer's candidate-list path narrows it
+    to min(B, max_degree)+1 (see the candidates test below)."""
+    n, B = 10, 3
+    adj = ring_adjacency(n)  # degree 2 < B
+    active = jnp.ones((n,)).at[4].set(0.0)
+    idx, wgt = neighbor_table(adj, active, B)
+    assert idx.shape == wgt.shape == (n, B + 1)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]), np.arange(n))
+    i, w = np.asarray(idx), np.asarray(wgt)
+    # padding: zero-weight slots always index self (gathers stay in-bounds
+    # and contribute nothing)
+    assert (i[w == 0] == np.broadcast_to(np.arange(n)[:, None], i.shape)[w == 0]).all()
+    # inactive row 4: identity
+    assert w[4, 0] == 1.0 and (w[4, 1:] == 0).all()
+    # active rows sum to 1 with uniform 1/(deg+1) weights
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+
+
+def test_neighbor_table_cap_keeps_lowest_index():
+    """Mirror of ``test_mixing_matrix_cap_keeps_lowest_index`` on the
+    sparse side: kept slots are the B lowest-index ACTIVE neighbours in
+    ascending order."""
+    n, B = 6, 2
+    adj = full_adjacency(n)
+    idx, wgt = neighbor_table(adj, jnp.ones((n,)), B)
+    for i in range(n):
+        kept = [int(j) for j, w in zip(np.asarray(idx[i, 1:]),
+                                       np.asarray(wgt[i, 1:])) if w > 0]
+        assert kept == [j for j in range(n) if j != i][:B], (i, kept)
+    active = jnp.ones((n,)).at[0].set(0.0)
+    idx, wgt = neighbor_table(adj, active, B)
+    kept = [int(j) for j, w in zip(np.asarray(idx[5, 1:]),
+                                   np.asarray(wgt[5, 1:])) if w > 0]
+    assert kept == [1, 2], kept
+
+
+@pytest.mark.parametrize("topology", ["ring", "cluster", "star", "full"])
+@pytest.mark.parametrize("n", [2, 3, 6, 226])
+def test_neighbor_candidates_match_dense_build(topology, n):
+    """The static candidate-list path (what the trainer caches so the
+    jitted round never materializes (N, N)) builds the SAME table as
+    densifying the full adjacency."""
+    cand = neighbor_candidates(topology, n)
+    assert cand is not None
+    cand_idx, cand_valid = cand
+    adj = static_adjacency(topology, n)
+    key = jax.random.PRNGKey(n)
+    for ratio in (0.0, 0.5):
+        active = _mask(key, n, ratio)
+        via_cand = neighbor_table_from_candidates(cand_idx, cand_valid,
+                                                  active, 7)
+        via_dense = neighbor_table(adj, active, 7)
+        np.testing.assert_array_equal(
+            np.asarray(densify_neighbor_table(*via_cand)),
+            np.asarray(densify_neighbor_table(*via_dense)),
+            err_msg=f"{topology} n={n} ratio={ratio}",
+        )
+
+
+def test_neighbor_candidates_random_is_none():
+    assert neighbor_candidates("random", 16) is None
+
+
+def test_stacked_neighbor_table_matches_per_scenario():
+    n, G, B = 12, 4, 3
+    adjs = jnp.stack([
+        ring_adjacency(n), cluster_adjacency(n, 4), star_adjacency(n),
+        random_adjacency(jax.random.PRNGKey(0), n, 3),
+    ])
+    acts = jnp.stack([_mask(jax.random.PRNGKey(g), n, 0.3) for g in range(G)])
+    si, sw = stacked_neighbor_table(adjs, acts, B)
+    for g in range(G):
+        ig, wg = neighbor_table(adjs[g], acts[g], B)
+        np.testing.assert_array_equal(np.asarray(si[g]), np.asarray(ig))
+        np.testing.assert_array_equal(np.asarray(sw[g]), np.asarray(wg))
