@@ -35,14 +35,40 @@ engine's speedup over the loop engine measured in the SAME process:
 ``--absolute`` additionally gates raw rounds/sec (same-machine
 comparisons, e.g. a perf bisect on one box).
 
+The serving gate (``--serve-only``)
+-----------------------------------
+The serve CI job gates ``benchmarks/serve_latency.py`` output against
+the committed ``BENCH_serve.json`` — a SEPARATE report with its own
+rules (latencies are wall clock, never ratio-gated):
+
+  * every per-bucket row in the baseline must be PRESENT in the fresh
+    run (a vanished bucket row is how a configured batch shape would
+    quietly stop being measured);
+  * ``personalize_batch_speedup_vs_serial`` (one scan+vmap-batched
+    cold-start program vs the historical per-patient loop, same run)
+    must stay >= ``--personalize-floor`` (default 2.0) — the serving
+    tentpole's acceptance criterion;
+  * ``bucket_batching_gain`` (forecasts/sec at the largest bucket over
+    the smallest, same run) must stay >= ``--batching-floor`` (default
+    1.0): batching requests must never LOSE to serving them one at a
+    time.
+
+``--serve-only`` checks only the serve report (the serve job);
+the default invocation checks only the training report (the bench
+job) — the two jobs own their own baselines.
+
 Usage:
     python benchmarks/check_bench_regression.py \
         [--fresh experiments/paper/rounds_per_sec.json] \
         [--baseline BENCH_rounds_per_sec.json] \
         [--threshold 0.2] [--absolute] [--update]
+    python benchmarks/check_bench_regression.py --serve-only \
+        [--serve-fresh experiments/paper/serve_latency.json] \
+        [--serve-baseline BENCH_serve.json] \
+        [--personalize-floor 2.0] [--batching-floor 1.0] [--update]
 
-``--update`` rewrites the baseline from the fresh run (for deliberate
-re-baselining commits) instead of checking.
+``--update`` rewrites the checked baseline from the fresh run (for
+deliberate re-baselining commits) instead of checking.
 """
 from __future__ import annotations
 
@@ -64,6 +90,11 @@ DEFAULT_SWEEP_FLOOR = 2.0
 # acceptance target: the sparse gossip representation never slower than
 # dense at N=226 — nominally >= 1.0, gated at 0.9 for runner jitter
 DEFAULT_SPARSE_FLOOR = 0.9
+# acceptance target: one batched cold-start program >= 2x the historical
+# per-patient personalization loop at a 16-patient cohort
+DEFAULT_PERSONALIZE_FLOOR = 2.0
+# acceptance target: batched forecasting never loses to one-at-a-time
+DEFAULT_BATCHING_FLOOR = 1.0
 
 
 # wall-clock rows (compile time included by design) — their ratio to the
@@ -91,12 +122,84 @@ def _ratios(report: dict) -> dict[str, float]:
     return {e: v / loop for e, v in rps.items() if e not in skip}
 
 
+def check_serve(args) -> int:
+    """The serving gate: bucket-row presence + the same-run
+    personalization-speedup and batching-gain floors (see module
+    docstring).  Latency values themselves are wall clock and never
+    compared across machines."""
+    fresh = json.loads(Path(args.serve_fresh).read_text())
+    if args.update:
+        Path(args.serve_baseline).write_text(json.dumps(fresh, indent=2) + "\n")
+        print(f"serve baseline updated -> {args.serve_baseline}")
+        return 0
+
+    base = json.loads(Path(args.serve_baseline).read_text())
+    failures: list[str] = []
+
+    for bucket in sorted(base.get("buckets", {}), key=int):
+        present = bucket in fresh.get("buckets", {})
+        print(f"{'bucket ' + bucket:>20s}: latency row "
+              f"{'present' if present else 'MISSING'} "
+              f"{'ok' if present else 'FAIL'}")
+        if not present:
+            failures.append(f"bucket {bucket} present in the baseline but "
+                            f"missing from the fresh run")
+
+    speedup = fresh.get("personalize_batch_speedup_vs_serial")
+    if speedup is None:
+        failures.append("fresh run reports no "
+                        "personalize_batch_speedup_vs_serial")
+    else:
+        verdict = "FAIL" if speedup < args.personalize_floor else "ok"
+        print(f"{'personalize batched':>20s}: {speedup:6.2f}x vs serial loop "
+              f"(floor {args.personalize_floor}x) {verdict}")
+        if speedup < args.personalize_floor:
+            failures.append(
+                f"batched personalization only {speedup:.2f}x the serial "
+                f"per-patient loop (floor {args.personalize_floor}x)")
+
+    gain = fresh.get("bucket_batching_gain")
+    if gain is None:
+        failures.append("fresh run reports no bucket_batching_gain")
+    else:
+        verdict = "FAIL" if gain < args.batching_floor else "ok"
+        print(f"{'bucket batching gain':>20s}: {gain:6.2f}x "
+              f"(floor {args.batching_floor}x) {verdict}")
+        if gain < args.batching_floor:
+            failures.append(
+                f"largest-bucket throughput only {gain:.2f}x the "
+                f"one-at-a-time bucket (floor {args.batching_floor}x)")
+
+    if failures:
+        print("\nSERVE BENCH GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nserve bench gate: green")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fresh",
                     default=str(ROOT / "experiments/paper/rounds_per_sec.json"))
     ap.add_argument("--baseline",
                     default=str(ROOT / "BENCH_rounds_per_sec.json"))
+    ap.add_argument("--serve-only", action="store_true",
+                    help="check the serving report instead of the "
+                         "training one (the serve CI job)")
+    ap.add_argument("--serve-fresh",
+                    default=str(ROOT / "experiments/paper/serve_latency.json"))
+    ap.add_argument("--serve-baseline",
+                    default=str(ROOT / "BENCH_serve.json"))
+    ap.add_argument("--personalize-floor", type=float,
+                    default=DEFAULT_PERSONALIZE_FLOOR,
+                    help="min allowed batched-personalization speedup "
+                         "over the serial per-patient loop")
+    ap.add_argument("--batching-floor", type=float,
+                    default=DEFAULT_BATCHING_FLOOR,
+                    help="min allowed largest/smallest-bucket "
+                         "forecasts-per-sec gain")
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="max allowed fractional drop vs baseline")
     ap.add_argument("--eval-floor", type=float, default=DEFAULT_EVAL_FLOOR,
@@ -110,6 +213,9 @@ def main(argv=None) -> int:
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the fresh run")
     args = ap.parse_args(argv)
+
+    if args.serve_only:
+        return check_serve(args)
 
     fresh = json.loads(Path(args.fresh).read_text())
     if args.update:

@@ -6,7 +6,7 @@ long_500k dry-runs lower at production shape.
 """
 import sys
 
-from repro.launch.serve import main
+from repro.launch.arch_demo import main
 
 if __name__ == "__main__":
     main()

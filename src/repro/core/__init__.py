@@ -30,4 +30,9 @@ from repro.core.gluadfl import GluADFL, FLState, SweepGrid
 from repro.core.fedavg import FedAvg
 from repro.core.meta import MAML, MetaSGD
 from repro.core.supervised import train_supervised
-from repro.core.personalize import personalize
+from repro.core.personalize import (
+    personalize,
+    personalize_batch,
+    personalize_batch_fn,
+    personalize_loop,
+)

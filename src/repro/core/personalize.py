@@ -1,9 +1,38 @@
 """'Personalized from population' (paper Fig 3): fine-tune the population
-model on one patient's own data, versus a from-scratch personalized model.
+model on one patient's own CGM history — the cold-start path a newly
+diagnosed patient takes before the population model has ever seen them.
+
+Engine design (mirrors the trainer's scan story in ``core/gluadfl.py``):
+
+  * :func:`personalize` runs the whole fine-tune as ONE compiled
+    ``lax.scan`` program over the steps — no per-step jit dispatch, no
+    per-step host sync.  The carried RNG key splits once per step, so
+    the key stream is identical to the historical Python-loop
+    implementation.
+  * :func:`personalize_batch` is the serving-side engine: ``jax.vmap``
+    of the same scanned body over a stacked batch of patients (padded
+    windows + per-patient counts, exactly the ``data/pipeline.py``
+    federation layout), so P cold-start patients fine-tune as ONE
+    program.  Per-patient results are BITWISE the serial
+    :func:`personalize` outputs under the same keys
+    (``tests/test_personalize.py`` pins it; ``benchmarks/serve_latency``
+    prices the speedup as ``personalize_batch_speedup_vs_serial``).
+  * :func:`personalize_loop` keeps the original per-step Python loop as
+    the explicit debug/reference twin (one jitted step per iteration) —
+    same numerics, P·steps dispatches; it is what the bench baseline
+    measures the batched engine against.
+
+Minibatch semantics (the cold-start bugfix): draws are uniform WITH
+replacement from the patient's ``count`` real windows.  When
+``batch_size`` exceeds the available history — tiny new-patient
+histories are exactly the serving case — the batch is CLAMPED to the
+history length instead of silently oversampling duplicates; rows past
+``count`` (padding) are never sampled.
 """
 from __future__ import annotations
 
-from typing import Any
+from functools import partial
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +41,46 @@ from repro.models.base import Model
 from repro.optim import Optimizer
 
 PyTree = Any
+
+
+def _fine_tune_fn(
+    model: Model,
+    optimizer: Optimizer,
+    steps: int,
+    batch_size: int,
+    n_rows: int,
+) -> Callable:
+    """The single-patient fine-tune body shared by every engine:
+    ``fine_tune(p0, key, x, y, count) -> (params, (steps,) losses)``.
+
+    ``batch_size`` is clamped to ``n_rows`` (the static row count of
+    ``x``) at build time — shapes must be static — and each step draws
+    uniform with-replacement indices from ``[0, min(count, n_rows))``,
+    so padded rows beyond ``count`` are never touched.  One
+    ``jax.random.split`` per step keeps the key stream identical to the
+    historical Python loop.
+    """
+    bs = max(1, min(batch_size, n_rows))
+
+    def loss_fn(p, bx, by):
+        return jnp.mean(jnp.square(model.apply(p, bx) - by))
+
+    def fine_tune(p0, key, x, y, count):
+        hi = jnp.maximum(jnp.minimum(count, n_rows), 1)
+
+        def step(carry, _):
+            p, st, k = carry
+            k, sub = jax.random.split(k)
+            idx = jax.random.randint(sub, (bs,), 0, hi)
+            loss, grads = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
+            p, st = optimizer.update(grads, st, p)
+            return (p, st, k), loss
+
+        st = optimizer.init(p0)
+        (p, _, _), losses = jax.lax.scan(step, (p0, st, key), None, length=steps)
+        return p, losses
+
+    return fine_tune
 
 
 def personalize(
@@ -24,16 +93,105 @@ def personalize(
     *,
     steps: int = 100,
     batch_size: int = 32,
+    count=None,
 ) -> PyTree:
-    """Fine-tune population params on a single patient (paper: adjust γ)."""
+    """Fine-tune population params on a single patient (paper: adjust γ)
+    as one compiled ``lax.scan`` program.
+
+    ``count`` (default: all of ``x``) marks how many leading rows of
+    ``x``/``y`` are real — pass it when the history is padded (the
+    serving layout); padded rows are never sampled.  ``batch_size`` is
+    clamped to the available history (cold-start histories shorter than
+    a batch train on everything they have, not on duplicated draws).
+    """
     x, y = jnp.asarray(x), jnp.asarray(y)
+    count = x.shape[0] if count is None else count
+    fine_tune = _fine_tune_fn(model, optimizer, steps, batch_size, x.shape[0])
+    params, _ = jax.jit(fine_tune)(population_params, key, x, y, count)
+    return params
+
+
+def personalize_batch(
+    model: Model,
+    optimizer: Optimizer,
+    population_params: PyTree,
+    keys,
+    x,
+    y,
+    counts,
+    *,
+    steps: int = 100,
+    batch_size: int = 32,
+) -> PyTree:
+    """Fine-tune P patients from the SAME population checkpoint as ONE
+    compiled program: ``jax.vmap`` of the scanned single-patient body.
+
+    Inputs follow the federation layout: ``keys (P, 2)``, padded windows
+    ``x (P, M, L)``, targets ``y (P, M)``, real-row ``counts (P,)``.
+    Returns the stacked personalized params (leaves ``(P, ...)``; index
+    one patient out with ``utils.pytree.tree_index``).  Patient ``i``'s
+    row is BITWISE ``personalize(..., keys[i], x[i], y[i],
+    count=counts[i])`` — batching is a re-batching, not a
+    re-definition, of the fine-tune.
+    """
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    fine_tune = _fine_tune_fn(model, optimizer, steps, batch_size, x.shape[1])
+    batched = jax.vmap(fine_tune, in_axes=(None, 0, 0, 0, 0))
+    params, _ = jax.jit(batched)(
+        population_params, jnp.asarray(keys), x, y, jnp.asarray(counts)
+    )
+    return params
+
+
+def personalize_batch_fn(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    steps: int = 100,
+    batch_size: int = 32,
+    n_rows: int,
+) -> Callable:
+    """The jitted batched fine-tune as a REUSABLE closure for serving:
+    ``f(population_params, keys, x, y, counts) -> (stacked params,
+    (P, steps) losses)``.  Unlike :func:`personalize_batch` (which jits
+    per call) the returned function keeps one jit cache, so a service
+    personalizing cohort after cohort compiles once per cohort size.
+    ``n_rows`` is the padded history length M the closure is built for.
+    """
+    fine_tune = _fine_tune_fn(model, optimizer, steps, batch_size, n_rows)
+    return jax.jit(jax.vmap(fine_tune, in_axes=(None, 0, 0, 0, 0)))
+
+
+def personalize_loop(
+    model: Model,
+    optimizer: Optimizer,
+    population_params: PyTree,
+    key,
+    x,
+    y,
+    *,
+    steps: int = 100,
+    batch_size: int = 32,
+    count=None,
+) -> PyTree:
+    """The historical per-step Python loop (one jitted step + one host
+    dispatch per iteration) — kept as the explicit debug/reference twin
+    of :func:`personalize` and the baseline the serve bench measures
+    :func:`personalize_batch` against.  Same numerics: clamp, count
+    masking, and key stream match the scanned engine bitwise.
+    """
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    count = x.shape[0] if count is None else count
+    n = x.shape[0]
+    bs = max(1, min(batch_size, n))
+    hi = jnp.maximum(jnp.minimum(jnp.asarray(count), n), 1)
 
     def loss_fn(p, bx, by):
         return jnp.mean(jnp.square(model.apply(p, bx) - by))
 
     @jax.jit
     def step(p, st, k):
-        idx = jax.random.randint(k, (batch_size,), 0, x.shape[0])
+        idx = jax.random.randint(k, (bs,), 0, hi)
         loss, grads = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
         p, st = optimizer.update(grads, st, p)
         return p, st, loss

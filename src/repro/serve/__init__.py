@@ -1,0 +1,33 @@
+"""BG-forecast prediction service (the deployment half of the paper's
+cold-start story): take a federation checkpoint, personalize it on new
+patients' short CGM histories as one batched program
+(``core.personalize.personalize_batch``), and answer CGM-window ->
+BG-forecast requests through a padded-bucket micro-batching queue.
+
+Layout (saxml-servable style — sorted batch-size buckets, bounded live
+batches, pre/post-processing split from the compiled method):
+
+  * ``servable.py`` — :class:`GlucoseServable`: checkpoint loading, the
+    per-bucket-compiled jitted ``forecast`` method, the patient param
+    store, and the batched cold-start personalization entry point;
+  * ``batcher.py``  — :class:`MicroBatcher`: the request queue
+    (pad-to-bucket sizing, max-live-batches admission, timeout flush,
+    per-request latency accounting), pure host-side Python with an
+    injectable clock so policy is unit-testable with a fake clock.
+
+``launch/serve.py`` is the CLI entry point; ``benchmarks/serve_latency``
+prices p50/p99 latency and forecasts/sec per bucket against the
+committed ``BENCH_serve.json`` baseline; ``docs/SERVING.md`` is the
+operator runbook.
+"""
+from repro.serve.batcher import MicroBatcher, Request, bucket_for
+from repro.serve.servable import GlucoseServable, load_population, replay
+
+__all__ = [
+    "GlucoseServable",
+    "MicroBatcher",
+    "Request",
+    "bucket_for",
+    "load_population",
+    "replay",
+]

@@ -1,0 +1,186 @@
+"""Request micro-batching for the BG-forecast service: a host-side
+queue that turns an asynchronous request stream into padded-bucket
+batches the per-bucket-compiled ``GlucoseServable.forecast`` method can
+run without recompiling.
+
+Policy (saxml-style):
+
+  * **pad-to-bucket** — a formed batch is sized to the smallest
+    configured bucket that fits it (:func:`bucket_for`); the servable
+    pads the remainder, so XLA only ever sees ``len(buckets)`` shapes;
+  * **formation** — a batch forms as soon as the queue can fill the
+    LARGEST bucket (throughput), or when the oldest queued request has
+    waited ``flush_timeout`` seconds (latency floor for trickle
+    traffic);
+  * **admission** — at most ``max_live_batches`` formed-but-unfinished
+    batches exist at once; :meth:`MicroBatcher.ready` returns ``None``
+    while the service is saturated, bounding queue->device inflight
+    memory;
+  * **accounting** — every request is stamped at submit / batch-start /
+    completion, and :meth:`MicroBatcher.stats` reduces the finished
+    stream to p50/p99 latency, mean queue wait, and throughput.
+
+Everything here is plain Python on the host — no jax — and the clock is
+injectable (``clock=``), so the whole policy is unit-testable with a
+fake clock (``tests/test_serve.py``).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket >= ``n``, or the largest bucket when ``n``
+    overflows every one (the caller then splits the batch).  ``buckets``
+    must be sorted ascending (the :class:`MicroBatcher`/servable
+    constructors normalize this)."""
+    if n < 1:
+        raise ValueError(f"batch of {n} requests has no bucket")
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclass
+class Request:
+    """One CGM-window -> BG-forecast request.
+
+    ``patient`` names a row of the servable's param store (0 is always
+    the population model — the brand-new-patient default; personalized
+    patients get their own row).  Timestamps are stamped by the batcher:
+    ``t_submit`` at :meth:`MicroBatcher.submit`, ``t_start`` when its
+    batch forms, ``t_done`` at :meth:`MicroBatcher.complete`.
+    """
+
+    rid: int
+    patient: int
+    window: np.ndarray  # (L,) normalized CGM history
+    t_submit: float = field(default=float("nan"))
+    t_start: float = field(default=float("nan"))
+    t_done: float = field(default=float("nan"))
+
+    @property
+    def latency(self) -> float:
+        """Submit-to-completion seconds (queue wait + execution)."""
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_wait(self) -> float:
+        """Submit-to-batch-formation seconds."""
+        return self.t_start - self.t_submit
+
+
+class MicroBatcher:
+    """The admission/formation policy around a ``deque`` of requests.
+
+    The caller drives it:  ``submit()`` incoming requests, poll
+    ``ready()`` for the next formed batch (``None`` = keep waiting),
+    run the batch, then ``complete()`` it so its admission slot frees
+    and its requests' latencies are recorded.  ``flush()`` force-forms
+    the tail at shutdown/drain time regardless of the timeout (but
+    still honoring admission).
+    """
+
+    def __init__(
+        self,
+        buckets: tuple[int, ...] = (1, 4, 16, 64),
+        *,
+        max_live_batches: int = 4,
+        flush_timeout: float = 0.005,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"need >= 1 positive bucket size, got {buckets!r}")
+        if max_live_batches < 1:
+            raise ValueError("max_live_batches must be >= 1")
+        self.buckets = buckets
+        self.max_live_batches = max_live_batches
+        self.flush_timeout = flush_timeout
+        self._clock = clock
+        self._queue: deque[Request] = deque()
+        self._live = 0
+        self._finished: list[Request] = []
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        """Enqueue a request (stamps its arrival time)."""
+        req.t_submit = self._clock()
+        self._queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def live_batches(self) -> int:
+        return self._live
+
+    # --------------------------------------------------------- formation
+    def _form(self, k: int) -> list[Request]:
+        now = self._clock()
+        batch = [self._queue.popleft() for _ in range(k)]
+        for r in batch:
+            r.t_start = now
+        self._live += 1
+        return batch
+
+    def ready(self) -> Optional[list[Request]]:
+        """The next batch to run, or ``None`` (queue empty, timeout not
+        reached, or admission saturated).  A full largest bucket forms
+        immediately; otherwise the queue waits out ``flush_timeout``
+        from the OLDEST request's submit time, then ships everything
+        queued (capped at the largest bucket)."""
+        if self._live >= self.max_live_batches or not self._queue:
+            return None
+        cap = self.buckets[-1]
+        if len(self._queue) >= cap:
+            return self._form(cap)
+        if self._clock() - self._queue[0].t_submit >= self.flush_timeout:
+            return self._form(len(self._queue))
+        return None
+
+    def flush(self) -> Optional[list[Request]]:
+        """Force-form the queued tail (drain path) — admission still
+        applies, so call :meth:`complete` between flushes."""
+        if self._live >= self.max_live_batches or not self._queue:
+            return None
+        return self._form(min(len(self._queue), self.buckets[-1]))
+
+    # -------------------------------------------------------- accounting
+    def complete(self, batch: list[Request]) -> None:
+        """Record a run batch: frees its admission slot and stamps +
+        collects per-request completion times."""
+        now = self._clock()
+        self._live -= 1
+        assert self._live >= 0, "complete() without a matching ready()/flush()"
+        for r in batch:
+            r.t_done = now
+        self._finished.extend(batch)
+
+    def stats(self) -> dict:
+        """Latency/throughput summary of every completed request:
+        p50/p99 latency (ms), mean queue wait (ms), requests completed,
+        and forecasts/sec over the completed span."""
+        if not self._finished:
+            return {"completed": 0}
+        lat = np.asarray([r.latency for r in self._finished])
+        wait = np.asarray([r.queue_wait for r in self._finished])
+        span = max(r.t_done for r in self._finished) - min(
+            r.t_submit for r in self._finished
+        )
+        return {
+            "completed": len(self._finished),
+            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_queue_wait_ms": float(wait.mean() * 1e3),
+            "forecasts_per_sec": (
+                len(self._finished) / span if span > 0 else float("inf")
+            ),
+        }

@@ -185,3 +185,81 @@ def test_baseline_sparse_row_requires_fresh_ratio(gate, tmp_path):
     sparse_gossip_speedup_vs_dense must fail (mirrors the sweep rule)."""
     assert _run(gate, tmp_path, _sparse_report(SPARSE_BASE, 1.2),
                 _sparse_report(SPARSE_BASE)) == 1
+
+
+# ------------------------------------------------------- serve gate rows
+
+
+def _serve_report(buckets=("1", "4", "16"), speedup=5.0, gain=10.0) -> dict:
+    row = {"p50_latency_ms": 1.0, "p99_latency_ms": 2.0,
+           "forecasts_per_sec": 100.0}
+    out = {"buckets": {b: dict(row) for b in buckets}}
+    if speedup is not None:
+        out["personalize_batch_speedup_vs_serial"] = speedup
+    if gain is not None:
+        out["bucket_batching_gain"] = gain
+    return out
+
+
+def _run_serve(gate, tmp_path, baseline, fresh, *extra) -> int:
+    b = tmp_path / "serve_baseline.json"
+    f = tmp_path / "serve_fresh.json"
+    b.write_text(json.dumps(baseline))
+    f.write_text(json.dumps(fresh))
+    return gate.main(["--serve-only", "--serve-baseline", str(b),
+                      "--serve-fresh", str(f), *extra])
+
+
+def test_serve_gate_green(gate, tmp_path):
+    assert _run_serve(gate, tmp_path, _serve_report(), _serve_report()) == 0
+
+
+def test_serve_gate_latency_values_not_compared(gate, tmp_path):
+    """Latencies are wall clock: a 100x slower fresh run must still pass
+    as long as rows are present and the same-run floors hold."""
+    fresh = _serve_report()
+    for row in fresh["buckets"].values():
+        row["p50_latency_ms"] *= 100
+        row["forecasts_per_sec"] /= 100
+    assert _run_serve(gate, tmp_path, _serve_report(), fresh) == 0
+
+
+def test_serve_gate_missing_bucket_row_fails(gate, tmp_path):
+    fresh = _serve_report(buckets=("1", "4"))  # 16 vanished
+    assert _run_serve(gate, tmp_path, _serve_report(), fresh) == 1
+    # extra fresh buckets (a new config) are fine without a baseline row
+    wide = _serve_report(buckets=("1", "4", "16", "64"))
+    assert _run_serve(gate, tmp_path, _serve_report(), wide) == 0
+
+
+def test_serve_gate_personalize_floor(gate, tmp_path):
+    """Floor inclusive at the default 2.0; adjustable like the others."""
+    base = _serve_report()
+    at = _run_serve(gate, tmp_path, base, _serve_report(speedup=2.0))
+    below = _run_serve(gate, tmp_path, base, _serve_report(speedup=1.99))
+    missing = _run_serve(gate, tmp_path, base, _serve_report(speedup=None))
+    assert (at, below, missing) == (0, 1, 1)
+    assert _run_serve(gate, tmp_path, base, _serve_report(speedup=1.5),
+                      "--personalize-floor", "1.4") == 0
+
+
+def test_serve_gate_batching_gain_floor(gate, tmp_path):
+    base = _serve_report()
+    at = _run_serve(gate, tmp_path, base, _serve_report(gain=1.0))
+    below = _run_serve(gate, tmp_path, base, _serve_report(gain=0.9))
+    missing = _run_serve(gate, tmp_path, base, _serve_report(gain=None))
+    assert (at, below, missing) == (0, 1, 1)
+
+
+def test_serve_gate_update_rewrites_serve_baseline_only(gate, tmp_path):
+    """--serve-only --update rewrites BENCH_serve, not the training
+    baseline."""
+    rounds_baseline = tmp_path / "baseline.json"
+    rounds_baseline.write_text(json.dumps(_report(BASE)))
+    fresh = _serve_report(speedup=9.0)
+    rc = _run_serve(gate, tmp_path, _serve_report(), fresh,
+                    "--baseline", str(rounds_baseline), "--update")
+    assert rc == 0
+    rewritten = json.loads((tmp_path / "serve_baseline.json").read_text())
+    assert rewritten == fresh
+    assert json.loads(rounds_baseline.read_text()) == _report(BASE)

@@ -43,6 +43,46 @@ def test_readme_quickstart_block_executes(tmp_path):
 
 
 @pytest.mark.docs
+def test_readme_serving_block_executes(tmp_path):
+    """The README's Serving section block must run exactly as written:
+    load the committed checkpoint, cold-start a cohort as one batched
+    program, and serve forecasts through the micro-batcher.  Selected by
+    content (the load_population call), not by fence index, so adding a
+    snippet elsewhere can't silently retarget this test."""
+    readme = (ROOT / "README.md").read_text()
+    blocks = re.findall(r"```python\n(.*?)```", readme, flags=re.DOTALL)
+    serving = [b for b in blocks if "load_population" in b]
+    assert len(serving) == 1, "README.md lost its serving quickstart block"
+    script = tmp_path / "readme_serving.py"
+    script.write_text(serving[0])
+    # cwd=ROOT: the block names the committed checkpoint by repo-relative
+    # path, exactly as a reader pasting it from a fresh clone would
+    out = _run([sys.executable, str(script)], cwd=ROOT)
+    assert out.returncode == 0, f"README serving block failed:\n{out.stderr[-3000:]}"
+    assert "forecasts (mg/dL)" in out.stdout
+
+
+@pytest.mark.docs
+def test_serving_doc_names_real_api():
+    """docs/SERVING.md documents knobs by name — they must exist with
+    the documented spelling (the doc can't rot past the API)."""
+    import inspect
+
+    from repro.serve import GlucoseServable, MicroBatcher
+
+    doc = (ROOT / "docs" / "SERVING.md").read_text()
+    batcher_params = inspect.signature(MicroBatcher).parameters
+    servable_params = inspect.signature(GlucoseServable).parameters
+    for knob in ("buckets", "flush_timeout", "max_live_batches"):
+        assert knob in doc and knob in batcher_params, knob
+    for knob in ("batch_mode", "personalize_steps"):
+        assert knob in doc and knob in servable_params, knob
+    for method in ("warmup", "personalize", "forecast",
+                   "row_of_or_population"):
+        assert method in doc and hasattr(GlucoseServable, method), method
+
+
+@pytest.mark.docs
 def test_readme_sweep_snippet_is_consistent():
     """The README sweep snippet names real API: SweepGrid.build and
     train_sweep must exist with the documented signature."""

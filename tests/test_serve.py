@@ -1,0 +1,288 @@
+"""Serving-subsystem tests: checkpoint -> personalize -> forecast end to
+end, the bitwise padding/batching contract, compile-once-per-bucket, the
+MicroBatcher policy under a fake clock, and the launcher's --selfcheck.
+CI re-runs these in the dedicated ``serve`` job (`pytest -m serve`);
+they also run in tier-1 (single-device, fast)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import personalize
+from repro.models import LSTMModel
+from repro.optim import adam
+from repro.serve import (
+    GlucoseServable,
+    MicroBatcher,
+    Request,
+    bucket_for,
+    load_population,
+    replay,
+)
+from repro.utils.pytree import tree_to_vector
+
+pytestmark = pytest.mark.serve
+
+ROOT = Path(__file__).resolve().parents[1]
+CKPT = ROOT / "experiments" / "checkpoints" / "gluadfl_ohiot1dm_ring.npz"
+L = 12
+
+
+@pytest.fixture(scope="module")
+def servable():
+    model, pop = load_population(CKPT)
+    sv = GlucoseServable(model, pop, buckets=(1, 2, 4),
+                         personalize_steps=4, personalize_batch_size=8)
+    rng = np.random.default_rng(0)
+    k = 3
+    sv.personalize(
+        ["patient-a", "patient-b", "patient-c"],
+        jax.random.split(jax.random.PRNGKey(0), k),
+        rng.normal(size=(k, 6, L)).astype(np.float32),
+        rng.normal(size=(k, 6)).astype(np.float32),
+        np.array([6, 3, 1], np.int32),
+    )
+    return sv
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_load_population_infers_hidden_width():
+    model, pop = load_population(CKPT)
+    like = model.init(jax.random.PRNGKey(0))
+    assert jax.tree.structure(pop) == jax.tree.structure(like)
+    vec = np.load(CKPT)["vec"]
+    assert (np.asarray(tree_to_vector(pop)) == vec).all()
+
+
+def test_load_population_rejects_wrong_hidden_and_unknown_count(tmp_path):
+    with pytest.raises(ValueError, match="hidden=64"):
+        load_population(CKPT, hidden=64)
+    bogus = tmp_path / "bogus.npz"
+    np.savez(bogus, vec=np.zeros(17, np.float32), meta="{}")
+    with pytest.raises(ValueError, match="no LSTM width"):
+        load_population(bogus)
+
+
+# ---------------------------------------------- personalize -> forecast e2e
+
+
+def test_checkpoint_personalize_forecast_roundtrip(servable):
+    """The full serving lifecycle: every personalized row is bitwise the
+    serial personalize() of that patient's history, and its served
+    forecast is bitwise the direct model.apply under those params."""
+    model = servable.model
+    rng = np.random.default_rng(0)
+    k = 3
+    x = rng.normal(size=(k, 6, L)).astype(np.float32)
+    y = rng.normal(size=(k, 6)).astype(np.float32)
+    counts = np.array([6, 3, 1], np.int32)
+    keys = jax.random.split(jax.random.PRNGKey(0), k)
+
+    windows = rng.normal(size=(k, L)).astype(np.float32)
+    rows = [servable.row_of(n) for n in ("patient-a", "patient-b", "patient-c")]
+    served = np.asarray(servable.forecast_rows(rows, windows))
+    for i, name in enumerate(("patient-a", "patient-b", "patient-c")):
+        expect = personalize(model, servable.optimizer, servable.population,
+                             keys[i], x[i], y[i], steps=4, batch_size=8,
+                             count=counts[i])
+        stored = servable.params_rows([servable.row_of(name)])
+        assert all(
+            (np.asarray(u) == np.asarray(v[0])).all()
+            for u, v in zip(jax.tree.leaves(expect), jax.tree.leaves(stored))
+        ), name
+        direct = float(model.apply(expect, windows[i][None, :])[0])
+        assert served[i] == direct, name
+
+
+def test_unknown_patient_falls_back_to_population(servable):
+    assert servable.row_of_or_population("never-seen") == 0
+    with pytest.raises(KeyError):
+        servable.row_of("never-seen")
+
+
+# ------------------------------------------------------- padding/bucketing
+
+
+def test_bucket_padding_never_changes_real_forecasts(servable):
+    """A request's forecast must not depend on who shares its batch:
+    every batch size n <= the largest bucket returns bitwise the n=1
+    forecasts, pad rows and all."""
+    rng = np.random.default_rng(1)
+    windows = rng.normal(size=(4, L)).astype(np.float32)
+    rows = [0, 1, 2, 3]
+    singles = np.asarray(
+        [servable.forecast_rows([r], w[None, :])[0]
+         for r, w in zip(rows, windows)]
+    )
+    for n in (1, 2, 3, 4):
+        batched = np.asarray(servable.forecast_rows(rows[:n], windows[:n]))
+        assert (batched == singles[:n]).all(), f"batch of {n}"
+
+
+def test_oversized_batch_splits_on_largest_bucket(servable):
+    rng = np.random.default_rng(2)
+    n = 4 * 2 + 3  # two full largest buckets + a padded tail
+    windows = rng.normal(size=(n, L)).astype(np.float32)
+    rows = [i % servable.num_rows for i in range(n)]
+    out = np.asarray(servable.forecast_rows(rows, windows))
+    singles = np.asarray(
+        [servable.forecast_rows([r], w[None, :])[0]
+         for r, w in zip(rows, windows)]
+    )
+    assert (out == singles).all()
+
+
+def test_forecast_compiles_once_per_bucket(servable):
+    """One jit cache, len(buckets) entries: after warmup every batch
+    size <= the cap reuses a bucket executable (no new shapes)."""
+    servable.warmup(history_len=L)
+    assert servable.compiled_buckets == set(servable.buckets)
+    sizes = servable._forecast_jit._cache_size()
+    rng = np.random.default_rng(3)
+    for n in (1, 2, 3, 4, 7):
+        windows = rng.normal(size=(n, L)).astype(np.float32)
+        servable.forecast_rows([0] * n, windows)
+    assert servable._forecast_jit._cache_size() == sizes == len(servable.buckets)
+
+
+def test_vmap_mode_is_close_but_not_the_contract(servable):
+    """batch_mode='vmap' exists for throughput: allclose to the bitwise
+    path (it is the same math, differently lowered)."""
+    sv = GlucoseServable(servable.model, servable.population,
+                         buckets=(1, 2, 4), batch_mode="vmap")
+    rng = np.random.default_rng(4)
+    windows = rng.normal(size=(3, L)).astype(np.float32)
+    a = np.asarray(sv.forecast_rows([0, 0, 0], windows))
+    b = np.asarray(servable.forecast_rows([0, 0, 0], windows))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_bucket_for():
+    assert bucket_for(1, (1, 4, 16)) == 1
+    assert bucket_for(2, (1, 4, 16)) == 4
+    assert bucket_for(16, (1, 4, 16)) == 16
+    assert bucket_for(99, (1, 4, 16)) == 16  # overflow -> caller splits
+    with pytest.raises(ValueError):
+        bucket_for(0, (1, 4))
+
+
+# --------------------------------------------------- batcher (fake clock)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _req(rid):
+    return Request(rid=rid, patient=0, window=np.zeros(L, np.float32))
+
+
+def test_full_bucket_forms_immediately():
+    clock = FakeClock()
+    mb = MicroBatcher((1, 4), flush_timeout=1.0, clock=clock)
+    for i in range(5):
+        mb.submit(_req(i))
+    batch = mb.ready()
+    assert [r.rid for r in batch] == [0, 1, 2, 3]  # largest bucket, FIFO
+    assert mb.pending == 1
+    mb.complete(batch)
+
+
+def test_partial_batch_waits_out_the_timeout():
+    clock = FakeClock()
+    mb = MicroBatcher((1, 4), flush_timeout=0.010, clock=clock)
+    mb.submit(_req(0))
+    clock.t = 0.005
+    mb.submit(_req(1))
+    assert mb.ready() is None  # oldest has waited only 5ms
+    clock.t = 0.010
+    batch = mb.ready()
+    assert [r.rid for r in batch] == [0, 1]  # timeout ships the queue
+    mb.complete(batch)
+
+
+def test_admission_blocks_at_max_live_batches():
+    clock = FakeClock()
+    mb = MicroBatcher((1, 2), max_live_batches=1, flush_timeout=0.0,
+                      clock=clock)
+    for i in range(4):
+        mb.submit(_req(i))
+    first = mb.ready()
+    assert first is not None
+    assert mb.ready() is None and mb.flush() is None  # saturated
+    assert mb.live_batches == 1
+    mb.complete(first)
+    assert mb.ready() is not None  # slot freed
+
+
+def test_latency_accounting_with_fake_clock():
+    clock = FakeClock()
+    mb = MicroBatcher((1, 2), flush_timeout=0.050, clock=clock)
+    mb.submit(_req(0))
+    clock.t = 0.010
+    mb.submit(_req(1))
+    batch = mb.ready()  # full bucket of 2 at t=10ms
+    clock.t = 0.030
+    mb.complete(batch)
+    stats = mb.stats()
+    assert stats["completed"] == 2
+    # rid 0: submitted t=0, done t=30ms; rid 1: submitted t=10ms
+    assert stats["p99_latency_ms"] == pytest.approx(30.0, rel=0.02)
+    assert stats["mean_queue_wait_ms"] == pytest.approx(5.0)  # (10 + 0) / 2
+
+
+def test_flush_drains_the_tail_regardless_of_timeout():
+    clock = FakeClock()
+    mb = MicroBatcher((1, 4), flush_timeout=100.0, clock=clock)
+    for i in range(3):
+        mb.submit(_req(i))
+    assert mb.ready() is None  # timeout far away, bucket not full
+    batch = mb.flush()
+    assert [r.rid for r in batch] == [0, 1, 2]
+    mb.complete(batch)
+    assert mb.flush() is None  # empty queue
+
+
+def test_replay_routes_every_request(servable):
+    rng = np.random.default_rng(5)
+    reqs = [
+        Request(rid=i, patient=int(rng.integers(0, servable.num_rows)),
+                window=rng.normal(size=(L,)).astype(np.float32))
+        for i in range(11)
+    ]
+    preds = replay(servable, MicroBatcher((1, 2, 4)), reqs)
+    assert sorted(preds) == list(range(11))
+    for r in reqs:
+        params = servable.params_rows([r.patient])
+        one = jax.tree.map(lambda l: l[0], params)
+        direct = float(servable.model.apply(one, jnp.asarray(r.window)[None, :])[0])
+        assert preds[r.rid] == direct, r.rid
+
+
+# -------------------------------------------------------------- selfcheck
+
+
+def test_launcher_selfcheck_passes():
+    """The CLI selfcheck (the CI serve job's smoke) replays a stream and
+    asserts bitwise parity with direct model.apply — returncode 0."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--requests", "12", "--steps", "2", "--personalize", "2",
+         "--history-windows", "8", "--buckets", "1,4", "--selfcheck"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "bitwise-match" in out.stdout
