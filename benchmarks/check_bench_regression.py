@@ -30,7 +30,17 @@ engine's speedup over the loop engine measured in the SAME process:
     ``sparse-gossip-10k`` scaling row are wall-clock/alternate-config
     rows — excluded from the loop-ratio rule, presence-checked instead
     (a vanished row is how the 10k-scale path would quietly stop being
-    measured).
+    measured);
+  * ``masked_gossip_overhead_vs_allgather`` (sharded-scan /
+    masked-sharded-scan, same process, only ``gossip_impl`` differs)
+    must stay <= ``--masked-ceiling`` (default 4.0): pairwise-masked
+    secure aggregation buys privacy with C(B+1, 2) per-row PRNG mask
+    draws per round — measured ~3x at bench scale, where the model is
+    small enough that mask generation dominates the round — and this
+    caps what that costs relative to the allgather row it is
+    bitwise-equal to.  The masked row itself is excluded from
+    the loop-ratio rule (its cost is owned by this same-run ceiling)
+    but presence-checked like the other special rows.
 
 ``--absolute`` additionally gates raw rounds/sec (same-machine
 comparisons, e.g. a perf bisect on one box).
@@ -95,6 +105,11 @@ DEFAULT_SPARSE_FLOOR = 0.9
 DEFAULT_PERSONALIZE_FLOOR = 2.0
 # acceptance target: batched forecasting never loses to one-at-a-time
 DEFAULT_BATCHING_FLOOR = 1.0
+# acceptance ceiling: masked (secure-aggregation) gossip at most 4x the
+# allgather row it is bitwise-equal to, measured in the same run — the
+# committed baseline sits ~3x (mask generation is C(B+1,2) normal draws
+# per row per round; the bench model is small enough that it dominates)
+DEFAULT_MASKED_CEILING = 4.0
 
 
 # wall-clock rows (compile time included by design) — their ratio to the
@@ -112,13 +127,18 @@ WALL_CLOCK_ROWS = ("serial-sweep", "sweep-scan", "sweep-sharded-psum")
 # row is compile-included wall clock by design
 SPARSE_ROWS = ("dense-gossip-n226", "sparse-gossip-n226", "sparse-gossip-10k")
 
+# the secure-aggregation row: its whole point is its same-run overhead
+# ratio against sharded-scan (gated by --masked-ceiling), so the loop
+# ratio would double-gate it; presence-checked like the rows above
+MASKED_ROWS = ("masked-sharded-scan",)
+
 
 def _ratios(report: dict) -> dict[str, float]:
     rps = report["rounds_per_sec"]
     loop = rps.get("loop")
     if not loop:
         raise SystemExit("report has no loop-engine rounds/sec to normalize by")
-    skip = ("loop",) + WALL_CLOCK_ROWS + SPARSE_ROWS
+    skip = ("loop",) + WALL_CLOCK_ROWS + SPARSE_ROWS + MASKED_ROWS
     return {e: v / loop for e, v in rps.items() if e not in skip}
 
 
@@ -208,6 +228,10 @@ def main(argv=None) -> int:
                     help="min allowed sweep-scan/serial-sweep speedup")
     ap.add_argument("--sparse-floor", type=float, default=DEFAULT_SPARSE_FLOOR,
                     help="min allowed sparse/dense gossip speedup at N=226")
+    ap.add_argument("--masked-ceiling", type=float,
+                    default=DEFAULT_MASKED_CEILING,
+                    help="max allowed masked-gossip overhead over the "
+                         "same-run allgather row")
     ap.add_argument("--absolute", action="store_true",
                     help="also gate raw rounds/sec (same-machine runs only)")
     ap.add_argument("--update", action="store_true",
@@ -228,7 +252,7 @@ def main(argv=None) -> int:
 
     # wall-clock / alternate-config rows skip the ratio rule but must
     # not silently vanish
-    for row in WALL_CLOCK_ROWS + SPARSE_ROWS:
+    for row in WALL_CLOCK_ROWS + SPARSE_ROWS + MASKED_ROWS:
         if row in base.get("rounds_per_sec", {}):
             present = row in fresh.get("rounds_per_sec", {})
             print(f"{row:>20s}: wall-clock row "
@@ -289,6 +313,20 @@ def main(argv=None) -> int:
     elif "sparse-gossip-n226" in base.get("rounds_per_sec", {}):
         failures.append("baseline has a sparse-gossip-n226 row but the fresh "
                         "run reports no sparse_gossip_speedup_vs_dense")
+
+    masked = fresh.get("masked_gossip_overhead_vs_allgather")
+    if masked is not None:
+        verdict = "FAIL" if masked > args.masked_ceiling else "ok"
+        print(f"{'masked/allgather cost':>20s}: {masked:6.2f}x "
+              f"(ceiling {args.masked_ceiling}x) {verdict}")
+        if masked > args.masked_ceiling:
+            failures.append(
+                f"masked gossip costs {masked:.2f}x the allgather row "
+                f"(ceiling {args.masked_ceiling}x)")
+    elif "masked-sharded-scan" in base.get("rounds_per_sec", {}):
+        failures.append("baseline has a masked-sharded-scan row but the "
+                        "fresh run reports no "
+                        "masked_gossip_overhead_vs_allgather")
 
     if args.absolute:
         for engine, b in sorted(base["rounds_per_sec"].items()):

@@ -18,6 +18,16 @@ path under its execution strategies.
                     XLA_FLAGS isn't already set);
   * sharded-psum-scan — same, with ``gossip_impl="psum"``: the
                     memory-scaled reduce-scatter schedule;
+  * masked-sharded-scan — sharded-scan with ``gossip_impl="masked"``:
+                    the pairwise-masked secure-aggregation wrapper
+                    (core/secure_agg.py) on top of the allgather
+                    schedule — per-round, per-edge antisymmetric masks
+                    generated and cancelled (the mixed result is
+                    bitwise the allgather row's, pinned by
+                    tests/test_secure_agg.py).  The same-run ratio
+                    sharded-scan / masked-sharded-scan prices the
+                    masking (``masked_gossip_overhead_vs_allgather`` in
+                    the JSON; the gate caps it at ``--masked-ceiling``);
   * serial-sweep   — the Fig-4/Fig-5 ablation shape the sweep engine
                     replaces: G (topology x inactive-ratio) scenarios
                     run one-at-a-time, each config tracing + compiling
@@ -473,6 +483,7 @@ def main(argv=None):
         ("scan", "tree", "allgather", "scan", 0),
         ("sharded-scan", "sharded", "allgather", "scan", 0),
         ("sharded-psum-scan", "sharded", "psum", "scan", 0),
+        ("masked-sharded-scan", "sharded", "masked", "scan", 0),
     ]
     if args.eval_every:
         cases.insert(2, ("scan-eval", "tree", "allgather", "scan", args.eval_every))
@@ -513,7 +524,13 @@ def main(argv=None):
            # matrix at paper scale: acceptance target >= the gate's
            # --sparse-floor (1.0 nominal, 0.9 gated for CPU noise)
            "sparse_gossip_speedup_vs_dense":
-               results["sparse-gossip-n226"] / results["dense-gossip-n226"]}
+               results["sparse-gossip-n226"] / results["dense-gossip-n226"],
+           # what masking costs, measured in the SAME process against the
+           # allgather row it is bitwise-equal to: >1 = slower.  The gate
+           # caps this at --masked-ceiling so mask generation can never
+           # silently blow up the round
+           "masked_gossip_overhead_vs_allgather":
+               results["sharded-scan"] / results["masked-sharded-scan"]}
     if "scan-eval" in results:
         # streaming-eval overhead: 1.0 = free, acceptance target >= 0.9
         out["scan_eval_relative_throughput"] = results["scan-eval"] / results["scan"]
@@ -530,6 +547,8 @@ def main(argv=None):
           f"{out['sweep_scan_speedup_vs_serial']:.2f}x (target >= 2)")
     print(f"sparse gossip speedup vs dense @ N={args.sparse_nodes}: "
           f"{out['sparse_gossip_speedup_vs_dense']:.2f}x (target >= 1)")
+    print(f"masked gossip overhead vs allgather: "
+          f"{out['masked_gossip_overhead_vs_allgather']:.2f}x (ceiling <= 4)")
     return out
 
 

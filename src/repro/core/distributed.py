@@ -70,8 +70,12 @@ from repro.utils.compat import shard_map as _shard_map
 
 PyTree = Any
 
-# interchangeable schedules for the general (non-ring) sharded mix
-GOSSIP_IMPLS = ("allgather", "psum")
+# interchangeable schedules for the general (non-ring) sharded mix.
+# "masked" is pairwise-masked secure aggregation (core.secure_agg): on
+# the wire it rides the allgather schedule — the mask cancellation term
+# is added OUTSIDE the collective by the trainer, so every shard body
+# below stays schedule-only
+GOSSIP_IMPLS = ("allgather", "psum", "masked")
 
 # mixing-operator representations: dense (N, N) matrix vs (N, B+1)
 # neighbor table (core.topology.neighbor_table)
@@ -236,7 +240,10 @@ def sharded_gossip_mix(
         cheapest latency on ICI but per-device memory stays O(N · D);
       * ``"psum"``      — contract local rows against this shard's mix
         COLUMNS and reduce-scatter the partial products
-        (``psum_gossip_shard``); per-device memory O(N/shards · D).
+        (``psum_gossip_shard``); per-device memory O(N/shards · D);
+      * ``"masked"``    — pairwise-masked secure aggregation: the wire
+        schedule is allgather, and the trainer adds the mask
+        cancellation term (``core.secure_agg``) outside this collective.
 
     With no ``mesh`` a cached 1-axis ``("node",)`` mesh over the largest
     device count dividing N is used (``launch.mesh.make_federation_mesh``).
@@ -258,6 +265,11 @@ def sharded_gossip_mix(
     """
     if impl not in GOSSIP_IMPLS:
         raise ValueError(f"impl {impl!r} not in {GOSSIP_IMPLS}")
+    if impl == "masked":
+        # secure aggregation is a trainer-level wrapper (core.secure_agg
+        # adds the exact-zero mask cancellation after this mix); the
+        # collective schedule underneath is the gathered-rows one
+        impl = "allgather"
     if mesh is None:
         mesh = _default_federation_mesh(mix.shape[0])
     axes = node_axes or tuple(

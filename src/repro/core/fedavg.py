@@ -1,13 +1,36 @@
 """FedAvg baseline (McMahan et al., AISTATS'17) — the paper's centralized
 FL comparison (star topology, Figure 1b).
 
-Round: server broadcasts w; each participating client runs E local SGD
+Round: server broadcasts w; each participating client runs its local SGD
 steps on its own data; server averages client models weighted by their
 sample counts.  Vectorized over clients exactly like GluADFL so the two
 trainers differ only in communication structure.
+
+Two long-standing bugs fixed here, both pinned by ``tests/test_baselines``:
+
+  * **Inactive clients used to train anyway.**  The vmapped client update
+    ran the full local scan for EVERY client and only discarded inactive
+    ones at aggregation — wasted work (at the paper's 70%-inactive
+    setting ~3.3x the useful FLOPs stayed in the program), and worse, a
+    poisoned inactive shard (NaN/Inf data) reached aggregation through
+    ``0 * NaN = NaN``.  The scan step is now where-gated on the client's
+    activity: active clients keep the identical numerics (the same keys,
+    batches and updates as before), inactive clients carry their params/
+    opt-state through unchanged and report zero loss — their update is
+    inert data flow XLA is free to simplify, and no value they compute
+    can reach the aggregate.
+  * **Epochs were silently treated as steps.**  ``local_epochs`` used to
+    collapse into ``max(cfg.local_steps, local_epochs)``.  It now means
+    what it says: ``local_epochs=k`` resolves to
+    ``ceil(max(counts) / batch_size) * k`` SGD steps (uniform sampling
+    has no epoch boundary, so the step count is the faithful translation
+    and the scan length must be one static number for the vmap — the
+    LARGEST client's epoch defines it).  ``local_epochs=None`` (default)
+    keeps ``cfg.local_steps`` as the literal step count.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Any, Callable
 
@@ -28,33 +51,55 @@ class FedAvg:
         optimizer: Optimizer,
         cfg: FLConfig,
         *,
-        local_epochs: int = 1,
+        local_epochs: int | None = None,
         loss_fn: Callable | None = None,
     ):
         self.model = model
         self.optimizer = optimizer
         self.cfg = cfg
-        self.local_steps = max(cfg.local_steps, local_epochs)
+        if local_epochs is not None and local_epochs < 1:
+            raise ValueError(f"local_epochs must be >= 1, got {local_epochs}")
+        self.local_epochs = local_epochs
         self.loss_fn = loss_fn or (
             lambda p, x, y: jnp.mean(jnp.square(model.apply(p, x) - y))
         )
-        self._round_jit = jax.jit(self._round, static_argnames=("batch_size",))
+        # local_steps is static: the scan length is program structure
+        self._round_jit = jax.jit(
+            self._round, static_argnames=("batch_size", "local_steps")
+        )
 
-    def _client_update(self, key, params, x, y, count, batch_size):
+    def resolve_local_steps(self, counts, batch_size: int) -> int:
+        """The per-round local scan length: ``cfg.local_steps`` verbatim,
+        or — with ``local_epochs`` set — ``ceil(max(counts)/batch_size) *
+        local_epochs`` (one "epoch" = enough uniform batches to cover the
+        largest client's data once; the scan length is shared across the
+        vmap, so the largest client defines it)."""
+        if self.local_epochs is None:
+            return max(1, int(self.cfg.local_steps))
+        biggest = max(1, int(max(counts)))
+        return math.ceil(biggest / batch_size) * self.local_epochs
+
+    def _client_update(self, key, params, x, y, count, active, batch_size, local_steps):
         opt_state = self.optimizer.init(params)
+        keep = active > 0
 
         def step(carry, k):
             p, st = carry
             idx = jax.random.randint(k, (batch_size,), 0, jnp.maximum(count, 1))
             loss, grads = jax.value_and_grad(self.loss_fn)(p, x[idx], y[idx])
-            p, st = self.optimizer.update(grads, st, p)
-            return (p, st), loss
+            new_p, new_st = self.optimizer.update(grads, st, p)
+            # inactive clients are inert: params/opt-state pass through
+            # bitwise and the loss is clean zero — nothing they compute
+            # (including NaN from a poisoned shard) escapes the gate
+            p = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_p, p)
+            st = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_st, st)
+            return (p, st), jnp.where(keep, loss, 0.0)
 
-        keys = jax.random.split(key, self.local_steps)
+        keys = jax.random.split(key, local_steps)
         (p, _), losses = jax.lax.scan(step, (params, opt_state), keys)
         return p, jnp.mean(losses)
 
-    def _round(self, key, params, x, y, counts, *, batch_size: int):
+    def _round(self, key, params, x, y, counts, *, batch_size: int, local_steps: int):
         n = self.cfg.num_nodes
         key, k_act, k_cli = jax.random.split(key, 3)
         from repro.core.async_sched import bernoulli_active
@@ -63,8 +108,8 @@ class FedAvg:
         client_keys = jax.random.split(k_cli, n)
         bcast = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), params)
         client_params, losses = jax.vmap(
-            partial(self._client_update, batch_size=batch_size)
-        )(client_keys, bcast, x, y, counts)
+            partial(self._client_update, batch_size=batch_size, local_steps=local_steps)
+        )(client_keys, bcast, x, y, counts, active)
 
         w = active * counts.astype(jnp.float32)
         w = w / jnp.maximum(jnp.sum(w), 1.0)
@@ -79,11 +124,15 @@ class FedAvg:
 
     def train(self, key, x, y, counts, *, batch_size: int = 64, rounds: int | None = None):
         rounds = rounds if rounds is not None else self.cfg.rounds
+        local_steps = self.resolve_local_steps(counts, batch_size)
         x, y, counts = jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
         key, k_init = jax.random.split(key)
         params = self.model.init(k_init)
         history = []
         for t in range(rounds):
-            key, params, loss = self._round_jit(key, params, x, y, counts, batch_size=batch_size)
+            key, params, loss = self._round_jit(
+                key, params, x, y, counts,
+                batch_size=batch_size, local_steps=local_steps,
+            )
             history.append({"round": t, "loss": float(loss)})
         return params, history

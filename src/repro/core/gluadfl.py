@@ -112,6 +112,7 @@ from repro.core.async_sched import bernoulli_active, staleness_update
 from repro.core.gossip import (
     gossip_mix_dp_kernel,
     gossip_mix_kernel,
+    gossip_mix_masked,
     gossip_mix_sparse_dp_kernel,
     gossip_mix_sparse_kernel,
     gossip_mix_sparse_tree,
@@ -119,6 +120,7 @@ from repro.core.gossip import (
     sharded_gossip_mix,
     sharded_gossip_mix_sparse,
 )
+from repro.core.secure_agg import MASK_STREAM_TAG
 from repro.core.topology import (
     mixing_matrix,
     neighbor_candidates,
@@ -278,7 +280,11 @@ class GluADFL:
         self.grad_at = grad_at
         self.mixer = mixer
         self.use_kernel = mixer == "kernel"  # kept for back-compat introspection
-        self.gossip_impl = gossip_impl       # sharded-mixer collective schedule
+        # collective schedule for the sharded mixer; "masked" (pairwise
+        # secure aggregation, core.secure_agg) composes with EVERY mixer:
+        # the base mix runs unchanged (allgather schedule when sharded)
+        # and the round adds the exact-zero mask cancellation term
+        self.gossip_impl = gossip_impl
         self.gossip_repr = gossip_repr       # dense (N,N) matrix vs neighbor table
         # static-topology candidate lists, host-built once: the sparse
         # config-driven path builds its (N, B+1) table straight from these
@@ -481,8 +487,22 @@ class GluADFL:
             )
         return gossip_mix_tree(stacked, mix)
 
-    def _gossip(self, premix: PyTree, mix: Any, active, k_dp, mesh=None) -> PyTree:
-        """Steps 2+3 (+ optional local-DP broadcast noise)."""
+    def _gossip(self, premix: PyTree, mix: Any, active, k_dp, mesh=None, mask_ctx=None) -> PyTree:
+        """Steps 2+3 (+ optional local-DP broadcast noise, + optional
+        pairwise-masked secure aggregation).  ``mask_ctx`` is the
+        ``(mask_key, (idx, wgt))`` pair ``_round`` builds for
+        ``gossip_impl="masked"``: the cancellation term is added to the
+        FINAL mixed state — after the DP composition too, so masked runs
+        stay bitwise twins of their unmasked counterparts on every
+        mixer/repr/DP combination."""
+        out = self._gossip_base(premix, mix, active, k_dp, mesh)
+        if mask_ctx is not None:
+            k_mask, (t_idx, t_wgt) = mask_ctx
+            out = gossip_mix_masked(out, t_idx, t_wgt, k_mask)
+        return out
+
+    def _gossip_base(self, premix: PyTree, mix: Any, active, k_dp, mesh=None) -> PyTree:
+        """The unmasked gossip: plain mix, or the local-DP composition."""
         if self.dp_noise_sigma <= 0.0:
             return self._plain_mix(premix, mix, mesh, active)
         noise_keys = split_like(k_dp, premix)
@@ -653,7 +673,22 @@ class GluADFL:
         k_dp = None
         if self.dp_noise_sigma > 0.0:
             key, k_dp = jax.random.split(key)
-        mixed = self._gossip(premix, mix, active, k_dp, mesh)
+        mask_ctx = None
+        if self.gossip_impl == "masked":
+            # the mask stream is FOLDED off the round key, never split:
+            # enabling secure aggregation must not perturb the
+            # activity/topology/batch/DP key chain (the bitwise-parity
+            # contract).  Dense rounds build the (N, B+1) table alongside
+            # the matrix purely for mask bookkeeping — the plain mix
+            # itself stays on the configured representation.
+            k_mask = jax.random.fold_in(state.key, MASK_STREAM_TAG)
+            table = (
+                mix
+                if self.gossip_repr == "sparse"
+                else neighbor_table(adj, active, cfg.comm_batch)
+            )
+            mask_ctx = (k_mask, table)
+        mixed = self._gossip(premix, mix, active, k_dp, mesh, mask_ctx)
 
         node_keys = jax.random.split(k_batch, n)
         new_params, new_opt, losses = jax.vmap(

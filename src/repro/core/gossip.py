@@ -141,3 +141,21 @@ def sharded_gossip_mix_sparse(
     from repro.core.distributed import sharded_gossip_mix_sparse as _sharded
 
     return _sharded(stacked_params, idx, wgt, active, **kw)
+
+
+def gossip_mix_masked(mixed: PyTree, idx: jnp.ndarray, wgt: jnp.ndarray, key) -> PyTree:
+    """Secure-aggregation wrapper (``gossip_impl="masked"``): add the
+    pairwise-mask cancellation term of ``core.secure_agg`` to an
+    already-mixed state.  The term is EXACTLY ``+0.0`` everywhere (the
+    uniform-row-weight masks pair up as exact IEEE negations), so the
+    result is bit-identical to ``mixed`` while the per-edge mask
+    generation — the priced overhead — stays live in the program.
+    ``(idx, wgt)`` is the round's ``(N, B+1)`` neighbor table and ``key``
+    the round's mask stream key; works after ANY base mixer (tree /
+    kernel / sharded, dense or sparse)."""
+    import jax
+
+    from repro.core.secure_agg import masked_mix_zero
+
+    zero = masked_mix_zero(mixed, idx, wgt, key)
+    return jax.tree.map(jnp.add, mixed, zero)

@@ -1,0 +1,166 @@
+"""Pairwise-masked secure aggregation for gossip (``gossip_impl="masked"``).
+
+The paper's privacy story so far is local-DP noise only (``gossip_dp``
+path in the trainer).  This module adds the classic decentralized
+secure-aggregation layer on top: every unordered edge ``(u, v)`` that
+appears inside a round's mixing neighborhood gets a per-round PRNG mask
+``z_{uv}`` known ONLY to its two endpoints, added with opposite signs to
+what each endpoint puts on the wire.  Because the paper's mixing rows are
+UNIFORM (``topology.mixing_matrix``: every kept participant of row ``n``
+carries the same weight ``1/deg``), the weighted mask terms inside row
+``n``'s contraction pair up as exact IEEE negations and the mask sum
+cancels to EXACTLY ``+0.0`` — the aggregate is bit-identical to the
+unmasked gossip, while no simulated wire tensor ever equals a node's raw
+parameters.
+
+Wire model (what a simulated recipient sees), per mixing row ``n`` with
+participant set ``S_n`` = the valid slots of its neighbor-table row
+(``core.topology.neighbor_table``; slot 0 is self, padding has weight 0):
+
+  ``wire[n, b] = w[idx[n, b]] + Σ_{a ∈ S_n, a ≠ b} ±z_{edge(a, b)}``
+
+with ``+z`` on the lower-node-id endpoint and ``-z`` on the higher.  The
+mask key is ``fold_in(fold_in(round_mask_key, min(u, v)), max(u, v))`` —
+per round, per unordered edge — so both endpoints can derive it without
+any extra communication, and a fresh round re-keys every edge.
+
+Threat model: honest-but-curious neighbors.  A recipient ``n`` knows the
+keys of its OWN edges and can strip ``z_{nb}`` from neighbor ``b``'s
+wire, but not the masks ``b`` shares with the row's other participants —
+so ``w_b`` is hidden whenever ``|S_n| >= 3``.  Two-participant rows
+degrade to the DP-noise layer (the only other participant could always
+invert a uniform 2-average anyway), and collusion of ALL of a row's
+participants is out of scope.  Inactive nodes transmit nothing: their
+table rows have a single valid slot (self), which admits no pairs, and
+dropped neighbors' slots carry weight 0 — so mid-round dropouts leave
+cancellation intact by construction rather than by a recovery protocol.
+
+The production path never materializes wires at all: the trainer mixes
+plainly and adds :func:`masked_mix_zero` — the weighted mask sum, computed
+term-by-term so each pair contributes ``u*z + u*(-z) = +0.0`` exactly.
+XLA does not fold floating ``x + (-x)`` (unsafe for NaN/Inf), so the
+per-edge mask generation stays live and the bench row prices the real
+overhead.  :func:`simulate_wires` materializes the wire tensors for the
+privacy/cancellation tests only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.rng import split_like
+
+PyTree = Any
+
+# fold_in tag separating the mask key stream from every other consumer of
+# the round key: the round body never SPLITS for masks, so turning masking
+# on cannot perturb the activity/topology/batch/DP key chain (that is the
+# bitwise-parity contract the tests pin)
+MASK_STREAM_TAG = 0x6D61736B  # ascii "mask"
+
+
+def _pair_slots(num_slots: int) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Static unordered slot-index pairs ``(a, b)``, ``a < b``, covering a
+    neighbor-table row's ``num_slots`` slots."""
+    pairs = [(a, b) for a in range(num_slots) for b in range(a + 1, num_slots)]
+    return tuple(p[0] for p in pairs), tuple(p[1] for p in pairs)
+
+
+def _edge_masks(key, idx: jnp.ndarray, wgt: jnp.ndarray, dim: int):
+    """Per-(row, pair) masks for one leaf.
+
+    Returns ``(z, sign_a, pa, pb)`` where ``z`` is ``(N, P, dim)`` fp32 —
+    the pair's mask, already zeroed on invalid pairs (either slot padded /
+    inactive, or a degenerate self-pair) — and ``sign_a`` is ``(N, P, 1)``
+    ±1: the sign the FIRST slot of the pair carries (+1 when it holds the
+    lower node id).  ``pa``/``pb`` are the static slot-index arrays.
+
+    The key for a pair is derived from the unordered node-id edge, not the
+    slot positions, so two rows that share an edge agree on its mask —
+    exactly as two real endpoints deriving it from a shared seed would.
+    """
+    n, s = idx.shape
+    pa_t, pb_t = _pair_slots(s)
+    pa = jnp.asarray(pa_t, jnp.int32)
+    pb = jnp.asarray(pb_t, jnp.int32)
+    ida, idb = idx[:, pa], idx[:, pb]  # (N, P) node ids at the two slots
+    lo = jnp.minimum(ida, idb)
+    hi = jnp.maximum(ida, idb)
+    valid = (wgt[:, pa] > 0) & (wgt[:, pb] > 0) & (ida != idb)
+
+    def one_edge(l, h):
+        k = jax.random.fold_in(jax.random.fold_in(key, l), h)
+        return jax.random.normal(k, (dim,), jnp.float32)
+
+    z = jax.vmap(jax.vmap(one_edge))(lo, hi)  # (N, P, dim)
+    z = jnp.where(valid[..., None], z, 0.0)
+    sign_a = jnp.where(ida <= idb, 1.0, -1.0)[..., None].astype(jnp.float32)
+    return z, sign_a, pa, pb
+
+
+def _cancellation_leaf(key, idx, wgt, leaf: jnp.ndarray) -> jnp.ndarray:
+    """The weighted mask sum of one leaf's contraction — exactly ``+0.0``.
+
+    Row weights are uniform over valid slots, so a pair's two weighted
+    terms are ``u*z`` and ``u*(-z)`` — exact IEEE negations (multiplication
+    is sign-magnitude) whose sum is ``+0.0`` for every finite mask.  The
+    sum over pairs of ``+0.0`` is ``+0.0``, so adding this term to the
+    plain mix leaves it bit-identical while the mask generation itself
+    (the thing the bench row prices) stays in the compiled program.
+    """
+    n = leaf.shape[0]
+    dim = math.prod(leaf.shape[1:]) if leaf.ndim > 1 else 1
+    z, sign_a, pa, _ = _edge_masks(key, idx, wgt, dim)
+    # uniform row weight: wgt[:, pa] == wgt[:, pb] on every valid pair
+    u = wgt[:, pa].astype(jnp.float32)[..., None]
+    t_pos = u * (sign_a * z)
+    t_neg = u * (-(sign_a * z))
+    zero = (t_pos + t_neg).sum(axis=1)  # (N, dim), every element +0.0
+    return zero.reshape(leaf.shape).astype(leaf.dtype)
+
+
+def masked_mix_zero(stacked: PyTree, idx, wgt, key) -> PyTree:
+    """The pairwise-mask cancellation term for a whole stacked pytree —
+    a tree shaped like ``stacked`` whose every element is ``+0.0``, built
+    from the same per-leaf key layout as the DP noise path
+    (``utils.rng.split_like``).  ``(idx, wgt)`` is the round's
+    ``(N, B+1)`` neighbor table (``core.topology.neighbor_table``)."""
+    keys = split_like(key, stacked)
+    return jax.tree.map(
+        lambda l, k: _cancellation_leaf(k, idx, wgt, l), stacked, keys
+    )
+
+
+def simulate_wires(stacked: PyTree, idx, wgt, key) -> PyTree:
+    """Materialize the per-row wire tensors — test/audit path ONLY.
+
+    Returns a tree of ``(N, B+1, D)`` fp32 arrays: ``wire[n, b]`` is what
+    row ``n``'s recipient sees from its slot-``b`` participant — the
+    participant's raw flattened leaf plus its signed mask sum over the
+    row's OTHER valid slots.  Invariants the tests pin:
+
+      * ``einsum("nb,nbd->nd", wgt, wire)`` ≈ the plain sparse mix (the
+        books balance through the wires, to float tolerance — the exact
+        bitwise path is :func:`masked_mix_zero`, which never re-orders
+        the contraction);
+      * for rows with >= 2 valid slots, NO valid slot's wire equals the
+        raw parameters (every participant is masked);
+      * rows with a single valid slot (inactive / isolated nodes) put
+        nothing but their own unmasked row on their own wire — and a
+        single-participant "aggregate" of yourself needs no masking.
+    """
+    keys = split_like(key, stacked)
+
+    def leaf(l, k):
+        n, s = idx.shape
+        flat = l.reshape(n, -1).astype(jnp.float32)
+        z, sign_a, pa, pb = _edge_masks(k, idx, wgt, flat.shape[1])
+        masks = jnp.zeros((n, s, flat.shape[1]), jnp.float32)
+        masks = masks.at[:, pa].add(sign_a * z)
+        masks = masks.at[:, pb].add(-sign_a * z)
+        return flat[idx] + masks
+
+    return jax.tree.map(leaf, stacked, keys)

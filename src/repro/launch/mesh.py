@@ -121,6 +121,7 @@ def choose_gossip_impl(
     *,
     shards: int | None = None,
     budget_bytes: int = DEFAULT_GATHER_BUDGET_BYTES,
+    secure: bool = False,
 ) -> str:
     """Memory-scaled gossip-impl selection (``--gossip-impl auto``).
 
@@ -131,12 +132,29 @@ def choose_gossip_impl(
     the gathered form wins (one dense collective, what the ICI fabric is
     best at); above it, psum is the only schedule that fits.  ``shards``
     defaults to the federation mesh width for ``num_nodes``.
+
+    ``secure=True`` requests pairwise-masked secure aggregation
+    (``core.secure_agg``): the choice is then ``"masked"`` regardless of
+    memory — its wire schedule rides allgather, so it is only offered
+    while the gathered federation fits the budget; past that this raises
+    rather than silently dropping the privacy layer (psum has no masked
+    sibling: the reduce-scatter never materializes per-neighbor wires to
+    mask).
     """
     if shards is None:
         shards = make_federation_mesh(num_nodes).shape["node"]
+    gathered = num_nodes * param_bytes_per_node
+    if secure:
+        if shards > 1 and gathered > budget_bytes:
+            raise ValueError(
+                f"secure (masked) gossip rides the allgather schedule, but "
+                f"the gathered federation ({gathered} bytes) exceeds the "
+                f"per-device budget ({budget_bytes}); shrink the model or "
+                f"raise budget_bytes"
+            )
+        return "masked"
     if shards <= 1:
         return "allgather"  # single shard: gather is a no-op copy
-    gathered = num_nodes * param_bytes_per_node
     return "allgather" if gathered <= budget_bytes else "psum"
 
 

@@ -46,14 +46,20 @@ federations.  Sweeps are single-process and scan-engine only
 flags refuse); instead of a checkpoint, the launcher writes a
 per-scenario summary JSON to ``--out``.
 
-Gossip impl (``--mixer sharded`` only)
---------------------------------------
+Gossip impl
+-----------
   * ``--gossip-impl allgather`` (default) — gather the federation's node
     axis per device and contract locally: fastest on ICI while the
-    gathered (N, D) block fits per-device memory;
+    gathered (N, D) block fits per-device memory (``--mixer sharded``;
+    ignored by tree/kernel);
   * ``--gossip-impl psum``      — psum-of-local-contributions
     (reduce-scatter): per-device memory O(N/shards · D), the multi-host
-    / big-model schedule;
+    / big-model schedule (``--mixer sharded`` only);
+  * ``--gossip-impl masked``    — pairwise-masked secure aggregation
+    (``core.secure_agg``): per-round per-edge PRNG masks whose weighted
+    sum cancels exactly, so neighbors never see raw parameters and the
+    trained state is BITWISE the unmasked run's.  Composes with every
+    mixer and representation (sharded rides the allgather schedule);
   * ``--gossip-impl auto``      — pick by the per-device memory the
     gathered federation would need (``launch.mesh.choose_gossip_impl``).
 
@@ -175,11 +181,12 @@ def main():
                          "INSIDE the scanned chunk (0 = off); no "
                          "per-round host sync")
     ap.add_argument("--gossip-impl", default="allgather",
-                    choices=["allgather", "psum", "auto"],
-                    help="sharded-mixer collective schedule: allgather "
-                         "(per-device O(N*D) gather), psum "
-                         "(reduce-scatter, per-device O(N/shards*D)), "
-                         "or auto (memory-based choice)")
+                    choices=["allgather", "psum", "masked", "auto"],
+                    help="gossip schedule: allgather (per-device O(N*D) "
+                         "gather), psum (reduce-scatter, per-device "
+                         "O(N/shards*D)), masked (pairwise-masked secure "
+                         "aggregation — any mixer; bitwise the allgather "
+                         "result), or auto (memory-based choice)")
     ap.add_argument("--gossip-repr", default="auto",
                     choices=["dense", "sparse", "auto"],
                     help="mixing-operator representation: dense (N, N) "

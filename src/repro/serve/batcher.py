@@ -16,9 +16,18 @@ Policy (saxml-style):
     batches exist at once; :meth:`MicroBatcher.ready` returns ``None``
     while the service is saturated, bounding queue->device inflight
     memory;
+  * **failure** — a batch whose execution raised must be handed back via
+    :meth:`MicroBatcher.fail` (the ``except`` twin of
+    :meth:`MicroBatcher.complete`): it frees the admission slot and
+    either requeues the requests at the FRONT of the queue (transient
+    errors) or drops them with accounting.  Without it an exception
+    between formation and completion leaks the slot forever and
+    admission permanently saturates;
   * **accounting** — every request is stamped at submit / batch-start /
     completion, and :meth:`MicroBatcher.stats` reduces the finished
-    stream to p50/p99 latency, mean queue wait, and throughput.
+    stream to p50/p99 latency, mean queue wait, and throughput (plus
+    failed/dropped counts; non-finite stamps are excluded so a stray
+    never-completed request cannot NaN the percentiles).
 
 Everything here is plain Python on the host — no jax — and the clock is
 injectable (``clock=``), so the whole policy is unit-testable with a
@@ -107,6 +116,8 @@ class MicroBatcher:
         self._queue: deque[Request] = deque()
         self._live = 0
         self._finished: list[Request] = []
+        self._failed_batches = 0
+        self._dropped = 0
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -164,23 +175,54 @@ class MicroBatcher:
             r.t_done = now
         self._finished.extend(batch)
 
+    def fail(self, batch: list[Request], *, requeue: bool = False) -> None:
+        """Hand back a batch whose execution RAISED — the ``except``-path
+        twin of :meth:`complete`.  Frees the admission slot (without it
+        the slot leaks and ``ready()`` saturates forever), then either
+        requeues the requests at the front of the queue in their original
+        order (``requeue=True`` — transient failures; their submit stamps
+        survive, so the flush timeout still honors true arrival time and
+        an eventual completion reports true end-to-end latency) or drops
+        them with accounting (``requeue=False`` — the default: a batch
+        that crashed the model is usually poisoned input)."""
+        self._live -= 1
+        assert self._live >= 0, "fail() without a matching ready()/flush()"
+        self._failed_batches += 1
+        if requeue:
+            for r in batch:
+                r.t_start = float("nan")  # re-stamped when it re-forms
+            self._queue.extendleft(reversed(batch))
+        else:
+            self._dropped += len(batch)
+
     def stats(self) -> dict:
         """Latency/throughput summary of every completed request:
         p50/p99 latency (ms), mean queue wait (ms), requests completed,
-        and forecasts/sec over the completed span."""
-        if not self._finished:
-            return {"completed": 0}
-        lat = np.asarray([r.latency for r in self._finished])
-        wait = np.asarray([r.queue_wait for r in self._finished])
-        span = max(r.t_done for r in self._finished) - min(
-            r.t_submit for r in self._finished
-        )
+        forecasts/sec over the completed span, and failure accounting
+        (``failed_batches``, ``dropped``).  Requests that never ran to
+        completion carry NaN stamps — they are excluded from every
+        reduction, so the percentiles stay finite no matter what the
+        caller mixed into the stream."""
+        base = {"failed_batches": self._failed_batches, "dropped": self._dropped}
+        done = [
+            r for r in self._finished
+            if np.isfinite(r.t_submit) and np.isfinite(r.t_done)
+        ]
+        if not done:
+            return {"completed": 0, **base}
+        lat = np.asarray([r.latency for r in done])
+        wait = np.asarray([r.queue_wait for r in done])
+        wait = wait[np.isfinite(wait)]
+        span = max(r.t_done for r in done) - min(r.t_submit for r in done)
         return {
-            "completed": len(self._finished),
+            "completed": len(done),
             "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
-            "mean_queue_wait_ms": float(wait.mean() * 1e3),
-            "forecasts_per_sec": (
-                len(self._finished) / span if span > 0 else float("inf")
+            "mean_queue_wait_ms": (
+                float(wait.mean() * 1e3) if wait.size else float("nan")
             ),
+            "forecasts_per_sec": (
+                len(done) / span if span > 0 else float("inf")
+            ),
+            **base,
         }

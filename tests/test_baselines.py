@@ -1,0 +1,176 @@
+"""Tests for the dormant baseline trainers (paper §4.4 comparisons):
+FedAvg's counts-weighted aggregation + its two bugfixes (inactive clients
+must be inert; epochs are not steps), MetaSGD's learned inner lr actually
+diverging from MAML, and ``train_supervised`` returning the best-val —
+not last — params.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from functools import partial
+
+from repro.config import FLConfig
+from repro.core import FedAvg
+from repro.core.async_sched import bernoulli_active
+from repro.core.meta import MAML, MetaSGD
+from repro.core.supervised import train_supervised
+from repro.models import LSTMModel
+from repro.optim import adam, sgd
+
+
+def _fed(n=4, m=24, L=6, seed=0, counts=None):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, m, L)).astype(np.float32)
+    y = rng.normal(size=(n, m)).astype(np.float32)
+    counts = np.asarray(counts if counts is not None else [m] * n, np.int32)
+    return x, y, counts
+
+
+# ------------------------------------------------------------- FedAvg
+def test_fedavg_aggregation_is_counts_weighted_mean():
+    # run the round's own client updates, then check the server step is
+    # EXACTLY the counts-weighted mean of the client models it produced
+    x, y, counts = _fed(counts=[10, 20, 40, 10])
+    model = LSTMModel(hidden=4).as_model()
+    cfg = FLConfig(num_nodes=4, inactive_ratio=0.0, local_steps=2)
+    fa = FedAvg(model, sgd(1e-2), cfg)
+    params = model.init(jax.random.PRNGKey(1))
+
+    key = jax.random.PRNGKey(3)
+    _, new_params, _ = fa._round_jit(
+        key, params, x, y, counts, batch_size=8, local_steps=2
+    )
+
+    # oracle: replicate the round's key chain, collect the per-client
+    # models, and weight them by counts in float64 numpy
+    _, _, k_cli = jax.random.split(key, 3)
+    client_keys = jax.random.split(k_cli, 4)
+    bcast = jax.tree.map(lambda l: jnp.broadcast_to(l, (4,) + l.shape), params)
+    cp, _ = jax.vmap(
+        partial(fa._client_update, batch_size=8, local_steps=2)
+    )(client_keys, bcast, x, y, counts, jnp.ones((4,)))
+    w = counts / counts.sum()
+
+    def oracle(leaf):
+        arr = np.asarray(leaf, np.float64)
+        return (w.reshape((4,) + (1,) * (arr.ndim - 1)) * arr).sum(axis=0)
+
+    for got, ref in zip(jax.tree.leaves(new_params), jax.tree.leaves(cp)):
+        np.testing.assert_allclose(
+            np.asarray(got), oracle(ref), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_fedavg_inactive_clients_are_inert():
+    # FAILS PRE-FIX: inactive clients used to train on their shard anyway
+    # and reach aggregation through 0 * NaN = NaN.  Poison an inactive
+    # client's data and the round must still produce finite params/loss.
+    x, y, counts = _fed(n=6)
+    model = LSTMModel(hidden=4).as_model()
+    cfg = FLConfig(num_nodes=6, inactive_ratio=0.5, local_steps=2)
+    fa = FedAvg(model, sgd(1e-2), cfg)
+    params = model.init(jax.random.PRNGKey(1))
+
+    key = jax.random.PRNGKey(0)
+    _, k_act, _ = jax.random.split(key, 3)  # the round's own key chain
+    active = np.asarray(bernoulli_active(k_act, 6, cfg.inactive_ratio))
+    assert 0 < active.sum() < 6, "seed must give a mixed active set"
+    poisoned = x.copy()
+    poisoned[active == 0] = np.nan
+
+    _, new_params, loss = fa._round_jit(
+        key, params, poisoned, y, counts, batch_size=8, local_steps=2
+    )
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(new_params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+    # and the gate is inert for ACTIVE clients: same round on clean data,
+    # with vs without the poison, agrees bitwise
+    _, clean_params, clean_loss = fa._round_jit(
+        key, params, x, y, counts, batch_size=8, local_steps=2
+    )
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(clean_params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert float(loss) == float(clean_loss)
+
+
+def test_fedavg_epochs_resolve_to_data_coverage_steps():
+    # FAILS PRE-FIX: local_epochs used to collapse into
+    # max(cfg.local_steps, local_epochs) — 3 "epochs" meant 3 STEPS
+    # regardless of how much data a client holds.
+    model = LSTMModel(hidden=4).as_model()
+    cfg = FLConfig(num_nodes=2, local_steps=1)
+    fa = FedAvg(model, sgd(1e-2), cfg, local_epochs=3)
+    # largest client: ceil(200 / 64) = 4 batches/epoch -> 12 steps
+    assert fa.resolve_local_steps([200, 50], batch_size=64) == 12
+    # no epochs requested: cfg.local_steps is the literal step count
+    assert FedAvg(model, sgd(1e-2), cfg).resolve_local_steps([200], 64) == 1
+
+
+def test_fedavg_epochs_match_equivalent_steps_bitwise():
+    # FAILS PRE-FIX: 2 epochs over 100 windows at batch 64 is 4 steps;
+    # the epoch-configured run must be bit-identical to the step-
+    # configured one (same key stream, same scan length)
+    x, y, counts = _fed(n=3, m=100, counts=[100, 100, 100])
+    model = LSTMModel(hidden=4).as_model()
+    by_steps = FedAvg(model, sgd(1e-2), FLConfig(num_nodes=3, local_steps=4))
+    by_epochs = FedAvg(
+        model, sgd(1e-2), FLConfig(num_nodes=3, local_steps=1), local_epochs=2
+    )
+    pa, ha = by_steps.train(jax.random.PRNGKey(5), x, y, counts,
+                            batch_size=64, rounds=2)
+    pb, hb = by_epochs.train(jax.random.PRNGKey(5), x, y, counts,
+                             batch_size=64, rounds=2)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert [h["loss"] for h in ha] == [h["loss"] for h in hb]
+
+
+# ------------------------------------------------------- MAML / MetaSGD
+def test_metasgd_learns_inner_lrs_and_diverges_from_maml():
+    x, y, counts = _fed(n=3, m=16)
+    model = LSTMModel(hidden=4).as_model()
+    maml = MAML(model, adam(1e-2), inner_lr=0.05, inner_steps=2)
+    msgd = MetaSGD(model, adam(1e-2), inner_lr=0.05, inner_steps=2)
+    p_a, lrs_a, _ = maml.train(jax.random.PRNGKey(2), x, y, counts,
+                               batch_size=8, steps=3)
+    p_b, lrs_b, _ = msgd.train(jax.random.PRNGKey(2), x, y, counts,
+                               batch_size=8, steps=3)
+    # MAML's inner lrs are frozen at the configured constant...
+    for leaf in jax.tree.leaves(lrs_a):
+        assert np.all(np.asarray(leaf) == np.float32(0.05))
+    # ...MetaSGD's are parameters: after meta-updates they must have moved
+    moved = any(
+        not np.allclose(np.asarray(leaf), 0.05)
+        for leaf in jax.tree.leaves(lrs_b)
+    )
+    assert moved, "MetaSGD inner lrs never updated"
+    # and the learned-lr meta-gradient changes the initialization itself
+    diff = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b))
+    )
+    assert diff, "MetaSGD trained the same init as MAML"
+
+
+# ---------------------------------------------------------- supervised
+def test_supervised_returns_best_val_params_not_last():
+    # anti-correlated val set: as training fits y, val targets -y get
+    # WORSE every eval — so best-val is the first boundary, never the last
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 6)).astype(np.float32)
+    w = rng.normal(size=(6,)).astype(np.float32)
+    y = (x @ w).astype(np.float32)
+    model = LSTMModel(hidden=4).as_model()
+    params, history = train_supervised(
+        model, sgd(5e-2), jax.random.PRNGKey(0), x, y,
+        batch_size=16, steps=40, val=(x, -y), eval_every=10,
+    )
+    vals = [h["val_loss"] for h in history if "val_loss" in h]
+    assert len(vals) == 4
+    pv = model.apply(params, jnp.asarray(x))
+    returned_val = float(jnp.mean(jnp.square(pv - jnp.asarray(-y))))
+    assert returned_val == pytest.approx(min(vals), rel=1e-5)
+    assert returned_val < vals[-1], (returned_val, vals)

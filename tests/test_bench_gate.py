@@ -187,6 +187,56 @@ def test_baseline_sparse_row_requires_fresh_ratio(gate, tmp_path):
                 _sparse_report(SPARSE_BASE)) == 1
 
 
+# ------------------------------------------------- masked-gossip overhead row
+
+
+MASKED_BASE = dict(BASE, **{"masked-sharded-scan": 40.0})
+
+
+def _masked_report(rps, overhead=None, **kw):
+    out = _report(rps, **kw)
+    if overhead is not None:
+        out["masked_gossip_overhead_vs_allgather"] = overhead
+    return out
+
+
+def test_masked_ceiling_gate(gate, tmp_path):
+    """masked overhead <= --masked-ceiling (default 4.0, inclusive)."""
+    base = _masked_report(MASKED_BASE, 3.0)
+    ok = _run(gate, tmp_path, base, _masked_report(MASKED_BASE, 3.0))
+    at = _run(gate, tmp_path, base, _masked_report(MASKED_BASE, 4.0))
+    above = _run(gate, tmp_path, base, _masked_report(MASKED_BASE, 4.01))
+    assert (ok, at, above) == (0, 0, 1)
+    # the ceiling is adjustable like every other floor
+    assert _run(gate, tmp_path, base, _masked_report(MASKED_BASE, 4.5),
+                "--masked-ceiling", "5.0") == 0
+
+
+def test_masked_row_excluded_from_ratio_rule(gate, tmp_path):
+    """The masked row's cost is owned by the same-run ceiling; tanking
+    its raw rps must NOT also trip the loop-ratio gate."""
+    fresh = dict(MASKED_BASE, **{"masked-sharded-scan": 1.0})
+    assert _run(gate, tmp_path, _masked_report(MASKED_BASE, 1.2),
+                _masked_report(fresh, 1.5)) == 0
+
+
+def test_missing_masked_row_fails(gate, tmp_path):
+    """The secure-aggregation row silently vanishing = masking stopped
+    being priced; old baselines without it demand nothing."""
+    fresh = {k: v for k, v in MASKED_BASE.items() if k != "masked-sharded-scan"}
+    assert _run(gate, tmp_path, _masked_report(MASKED_BASE, 1.2),
+                _masked_report(fresh, 1.2)) == 1
+    assert _run(gate, tmp_path, _report(BASE),
+                _masked_report(MASKED_BASE, 1.2)) == 0
+
+
+def test_baseline_masked_row_requires_fresh_ratio(gate, tmp_path):
+    """A baseline with the masked row but a fresh run reporting no
+    overhead ratio must fail (mirrors the sweep/sparse rule)."""
+    assert _run(gate, tmp_path, _masked_report(MASKED_BASE, 1.2),
+                _masked_report(MASKED_BASE)) == 1
+
+
 # ------------------------------------------------------- serve gate rows
 
 

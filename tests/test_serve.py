@@ -242,6 +242,67 @@ def test_latency_accounting_with_fake_clock():
     assert stats["mean_queue_wait_ms"] == pytest.approx(5.0)  # (10 + 0) / 2
 
 
+def test_fail_frees_the_admission_slot():
+    # FAILS PRE-FIX (no fail() existed): an exception between formation
+    # and complete() leaked _live forever and ready() saturated for the
+    # rest of the process
+    clock = FakeClock()
+    mb = MicroBatcher((1, 2), max_live_batches=1, flush_timeout=0.0,
+                      clock=clock)
+    for i in range(4):
+        mb.submit(_req(i))
+    batch = mb.ready()
+    assert mb.ready() is None  # saturated while the batch is in flight
+    mb.fail(batch)  # the model raised: drop the batch, free the slot
+    assert mb.live_batches == 0
+    nxt = mb.ready()
+    assert [r.rid for r in nxt] == [2, 3]  # admission recovered
+    mb.complete(nxt)
+    stats = mb.stats()
+    assert stats["failed_batches"] == 1 and stats["dropped"] == 2
+    assert stats["completed"] == 2
+
+
+def test_fail_requeue_preserves_order_and_latency():
+    clock = FakeClock()
+    mb = MicroBatcher((1, 2), flush_timeout=0.0, clock=clock)
+    mb.submit(_req(0))
+    mb.submit(_req(1))
+    clock.t = 0.010
+    batch = mb.ready()
+    mb.fail(batch, requeue=True)  # transient failure: retry them
+    assert mb.live_batches == 0 and mb.pending == 2
+    clock.t = 0.020
+    retry = mb.ready()
+    assert [r.rid for r in retry] == [0, 1]  # original order, front of queue
+    clock.t = 0.030
+    mb.complete(retry)
+    stats = mb.stats()
+    # latency spans the ORIGINAL submit (t=0), not the retry formation
+    assert stats["completed"] == 2
+    assert stats["p99_latency_ms"] == pytest.approx(30.0, rel=0.02)
+    assert stats["failed_batches"] == 1 and stats["dropped"] == 0
+    assert np.isfinite(stats["mean_queue_wait_ms"])
+
+
+def test_stats_robust_to_never_completed_requests():
+    # a request that never ran to completion (e.g. mixed into _finished
+    # by a buggy caller, or inspected mid-flight) carries NaN stamps —
+    # stats() must exclude it instead of NaN-ing the percentiles
+    clock = FakeClock()
+    mb = MicroBatcher((1, 2), flush_timeout=0.0, clock=clock)
+    mb.submit(_req(0))
+    batch = mb.ready()
+    clock.t = 0.005
+    mb.complete(batch)
+    mb._finished.append(_req(99))  # never submitted/completed: all-NaN
+    stats = mb.stats()
+    assert stats["completed"] == 1
+    for k in ("p50_latency_ms", "p99_latency_ms", "mean_queue_wait_ms",
+              "forecasts_per_sec"):
+        assert np.isfinite(stats[k]), (k, stats)
+
+
 def test_flush_drains_the_tail_regardless_of_timeout():
     clock = FakeClock()
     mb = MicroBatcher((1, 4), flush_timeout=100.0, clock=clock)
