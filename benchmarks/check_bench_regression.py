@@ -40,7 +40,16 @@ engine's speedup over the loop engine measured in the SAME process:
     caps what that costs relative to the allgather row it is
     bitwise-equal to.  The masked row itself is excluded from
     the loop-ratio rule (its cost is owned by this same-run ceiling)
-    but presence-checked like the other special rows.
+    but presence-checked like the other special rows;
+  * ``table4_batched_speedup_vs_serial`` (table4-batched /
+    table4-serial-loops: the Table-4 trainable-baseline grid — FedAvg,
+    MAML, MetaSGD, supervised LSTM — on the chunked scan engines vs the
+    per-round ``engine="loop"`` oracles, same run, warm steady state)
+    must stay >= ``--table4-floor`` (default 1.5): batching each
+    method's whole round budget into one compiled execution has to
+    actually beat dispatching round-by-round.  The pair runs a
+    different workload than the GluADFL engine rows, so it is excluded
+    from the loop-ratio rule and presence-checked like the rows above.
 
 ``--absolute`` additionally gates raw rounds/sec (same-machine
 comparisons, e.g. a perf bisect on one box).
@@ -103,6 +112,10 @@ DEFAULT_SPARSE_FLOOR = 0.9
 # acceptance target: one batched cold-start program >= 2x the historical
 # per-patient personalization loop at a 16-patient cohort
 DEFAULT_PERSONALIZE_FLOOR = 2.0
+# acceptance target: the Table-4 trainable-baseline grid on the chunked
+# scan engines (<= 4 compiled executions) >= 1.5x the serial per-round
+# loops, same run, end-to-end wall clock
+DEFAULT_TABLE4_FLOOR = 1.5
 # acceptance target: batched forecasting never loses to one-at-a-time
 DEFAULT_BATCHING_FLOOR = 1.0
 # acceptance ceiling: masked (secure-aggregation) gossip at most 4x the
@@ -132,13 +145,20 @@ SPARSE_ROWS = ("dense-gossip-n226", "sparse-gossip-n226", "sparse-gossip-10k")
 # ratio would double-gate it; presence-checked like the rows above
 MASKED_ROWS = ("masked-sharded-scan",)
 
+# the Table-4 trainable-baseline grid pair (FedAvg + MAML + MetaSGD +
+# supervised LSTM, serial per-round loops vs the chunked scan engines):
+# a different workload than the GluADFL engine rows, so its loop ratio
+# is apples-to-oranges — gated by the same-run --table4-floor speedup
+# plus the presence rule
+TABLE4_ROWS = ("table4-serial-loops", "table4-batched")
+
 
 def _ratios(report: dict) -> dict[str, float]:
     rps = report["rounds_per_sec"]
     loop = rps.get("loop")
     if not loop:
         raise SystemExit("report has no loop-engine rounds/sec to normalize by")
-    skip = ("loop",) + WALL_CLOCK_ROWS + SPARSE_ROWS + MASKED_ROWS
+    skip = ("loop",) + WALL_CLOCK_ROWS + SPARSE_ROWS + MASKED_ROWS + TABLE4_ROWS
     return {e: v / loop for e, v in rps.items() if e not in skip}
 
 
@@ -232,6 +252,9 @@ def main(argv=None) -> int:
                     default=DEFAULT_MASKED_CEILING,
                     help="max allowed masked-gossip overhead over the "
                          "same-run allgather row")
+    ap.add_argument("--table4-floor", type=float, default=DEFAULT_TABLE4_FLOOR,
+                    help="min allowed table4-batched/table4-serial-loops "
+                         "speedup of the baseline grid")
     ap.add_argument("--absolute", action="store_true",
                     help="also gate raw rounds/sec (same-machine runs only)")
     ap.add_argument("--update", action="store_true",
@@ -252,7 +275,7 @@ def main(argv=None) -> int:
 
     # wall-clock / alternate-config rows skip the ratio rule but must
     # not silently vanish
-    for row in WALL_CLOCK_ROWS + SPARSE_ROWS + MASKED_ROWS:
+    for row in WALL_CLOCK_ROWS + SPARSE_ROWS + MASKED_ROWS + TABLE4_ROWS:
         if row in base.get("rounds_per_sec", {}):
             present = row in fresh.get("rounds_per_sec", {})
             print(f"{row:>20s}: wall-clock row "
@@ -313,6 +336,19 @@ def main(argv=None) -> int:
     elif "sparse-gossip-n226" in base.get("rounds_per_sec", {}):
         failures.append("baseline has a sparse-gossip-n226 row but the fresh "
                         "run reports no sparse_gossip_speedup_vs_dense")
+
+    t4 = fresh.get("table4_batched_speedup_vs_serial")
+    if t4 is not None:
+        verdict = "FAIL" if t4 < args.table4_floor else "ok"
+        print(f"{'table4 batched/serial':>20s}: {t4:6.2f}x "
+              f"(floor {args.table4_floor}x) {verdict}")
+        if t4 < args.table4_floor:
+            failures.append(
+                f"batched Table-4 baseline grid only {t4:.2f}x the serial "
+                f"per-round loops (floor {args.table4_floor}x)")
+    elif "table4-batched" in base.get("rounds_per_sec", {}):
+        failures.append("baseline has a table4-batched row but the fresh "
+                        "run reports no table4_batched_speedup_vs_serial")
 
     masked = fresh.get("masked_gossip_overhead_vs_allgather")
     if masked is not None:

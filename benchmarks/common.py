@@ -90,18 +90,22 @@ def train_gluadfl(dataset: str, scale: Scale, *, topology: str = "random",
     return model, pop, hist, fed
 
 
-def train_fedavg(dataset: str, scale: Scale, *, seed: int = 0):
+def train_fedavg(dataset: str, scale: Scale, *, seed: int = 0,
+                 engine: str = "scan", chunk: int | None = None):
     fed = load(dataset, scale)
     model = LSTMModel(hidden=scale.hidden).as_model()
     cfg = FLConfig(num_nodes=fed.num_nodes, rounds=scale.rounds, local_steps=2, seed=seed)
     fa = FedAvg(model, adam(2e-3), cfg)
     params, hist = fa.train(
-        jax.random.PRNGKey(seed), fed.x, fed.y, fed.counts, batch_size=scale.batch_size
+        jax.random.PRNGKey(seed), fed.x, fed.y, fed.counts,
+        batch_size=scale.batch_size, engine=engine, chunk=chunk,
     )
     return model, params, hist, fed
 
 
-def train_mixed_supervised(dataset: str, scale: Scale, *, model_ctor=None, seed: int = 0):
+def train_mixed_supervised(dataset: str, scale: Scale, *, model_ctor=None,
+                           seed: int = 0, engine: str = "scan",
+                           chunk: int | None = None):
     fed = load(dataset, scale)
     ctor = model_ctor or (lambda: LSTMModel(hidden=scale.hidden).as_model())
     model = ctor()
@@ -112,6 +116,7 @@ def train_mixed_supervised(dataset: str, scale: Scale, *, model_ctor=None, seed:
     params, hist = train_supervised(
         model, adam(2e-3), jax.random.PRNGKey(seed), x, y,
         steps=scale.sup_steps, batch_size=scale.batch_size, val=(vx, vy),
+        engine=engine, chunk=chunk,
     )
     return model, params, hist, fed
 

@@ -1,6 +1,12 @@
 """Table 4: BG prediction for seen/unseen patients by ALL population
 methods: LR, XGBoost-like GBT, LSTM (supervised), N-BEATS, NHiTS, MAML,
-MetaSGD, FedAvg, GluADFL(Ring/Cluster/Random)."""
+MetaSGD, FedAvg, GluADFL(Ring/Cluster/Random).
+
+The trainable baselines (FedAvg, MAML, MetaSGD, LSTM-supervised) run on
+the chunked scan engines: :func:`run_baseline_grid` trains the whole
+method grid with ``chunk = rounds`` — ONE compiled execution per method,
+<= 4 total, counted through ``chunked.dispatch_chunk`` by
+``tests/test_baseline_engines.py``."""
 from __future__ import annotations
 
 import jax
@@ -17,7 +23,8 @@ from benchmarks.common import (
     train_gluadfl,
     train_mixed_supervised,
 )
-from repro.core import MAML, MetaSGD
+from repro.config import FLConfig
+from repro.core import FedAvg, MAML, MetaSGD, train_supervised
 from repro.data.pipeline import FederatedData
 from repro.metrics import all_metrics
 from repro.models import GradientBoostedTrees, LinearModel, LSTMModel, NBeatsModel, NHiTSModel
@@ -82,6 +89,59 @@ METHODS = [
     "lr", "xgboost", "lstm", "nbeats", "nhits", "maml", "metasgd",
     "fedavg", "gluadfl-ring", "gluadfl-cluster", "gluadfl-random",
 ]
+
+# The four baselines with a compiled scan engine behind them.
+BASELINE_GRID_METHODS = ("fedavg", "maml", "metasgd", "lstm")
+
+
+def run_baseline_grid(train_ds: str, scale: Scale | None = None,
+                      methods=BASELINE_GRID_METHODS, *, engine: str = "scan",
+                      seed: int = 0) -> dict:
+    """Train the Table-4 trainable-baseline grid on one dataset.
+
+    With ``engine="scan"`` each method runs its whole round budget as a
+    single donated chunk (``chunk = rounds``), so the full grid
+    dispatches <= len(methods) <= 4 compiled executions through
+    ``chunked.dispatch_chunk`` — the budget
+    ``tests/test_baseline_engines.py`` pins by monkeypatching the
+    chokepoint.  ``engine="loop"`` runs the original per-round jit loops
+    (the serial arm of the ``table4-batched`` wall-clock benchmark).
+
+    Returns ``{method: {"model", "params", "history"}}``.
+    """
+    scale = scale or Scale()
+    fed = load(train_ds, scale)
+    out: dict = {}
+    for method in methods:
+        model = LSTMModel(hidden=scale.hidden).as_model()
+        if method == "fedavg":
+            cfg = FLConfig(num_nodes=fed.num_nodes, rounds=scale.rounds,
+                           local_steps=2, seed=seed)
+            fa = FedAvg(model, adam(2e-3), cfg)
+            params, hist = fa.train(
+                jax.random.PRNGKey(seed), fed.x, fed.y, fed.counts,
+                batch_size=scale.batch_size, engine=engine, chunk=scale.rounds,
+            )
+        elif method in ("maml", "metasgd"):
+            cls = MAML if method == "maml" else MetaSGD
+            meta = cls(model, adam(1e-3), inner_lr=1e-2, inner_steps=3)
+            params, _, hist = meta.train(
+                jax.random.PRNGKey(seed), fed.x, fed.y, fed.counts,
+                batch_size=scale.batch_size, steps=scale.rounds,
+                engine=engine, chunk=scale.rounds,
+            )
+        elif method == "lstm":
+            x = np.concatenate([p.train_x for p in fed.patients])
+            y = np.concatenate([p.train_y for p in fed.patients])
+            params, hist = train_supervised(
+                model, adam(2e-3), jax.random.PRNGKey(seed), x, y,
+                steps=scale.rounds, batch_size=scale.batch_size,
+                engine=engine, chunk=scale.rounds,
+            )
+        else:
+            raise KeyError(method)
+        out[method] = {"model": model, "params": params, "history": hist}
+    return out
 
 
 def run(scale: Scale | None = None, datasets=None, methods=None) -> dict:

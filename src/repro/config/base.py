@@ -193,6 +193,10 @@ class FLConfig:
     rounds: int = 100
     local_steps: int = 1
     inactive_ratio: float = 0.0       # fraction of nodes inactive per round
+    schedule: str = "bernoulli"       # bernoulli | markov (sticky staleness)
+    p_stay_active: float = 0.9        # markov: P(active -> active)
+    p_stay_inactive: float = 0.7      # markov: P(inactive -> inactive)
+    data_skew: float = 0.0            # non-IID per-node mg/dL shift strength
     cluster_size: int = 4
     seed: int = 0
 
@@ -202,11 +206,19 @@ class SweepConfig:
     """The scenario grid :meth:`repro.core.GluADFL.train_sweep` batches
     into one compiled program — defaults are the paper's Fig-5 grid
     (3 topologies x 5 inactive ratios, seed 0).  ``seeds`` is a count:
-    seeds ``0..seeds-1`` each become a scenario replica."""
+    seeds ``0..seeds-1`` each become a scenario replica.
+
+    The optional axes (``schedules``, ``skews``, ``dp_sigmas``) extend
+    the cross product with Markov-sticky staleness, non-IID data skew,
+    and DP noise levels; their defaults leave the grid exactly the
+    classic 3-axis one (3-tuple labels, unchanged numerics)."""
 
     topologies: tuple = ("ring", "cluster", "random")
     inactive_ratios: tuple = (0.0, 0.3, 0.5, 0.7, 0.9)
     seeds: int = 1
+    schedules: tuple = ()             # e.g. ("bernoulli", "markov")
+    skews: tuple = ()                 # e.g. (0.0, 0.5, 1.0) — mg/dL-shift strengths
+    dp_sigmas: tuple = ()             # e.g. (0.0, 0.01, 0.05) — gossip DP sigma
 
     def seed_list(self) -> tuple:
         return tuple(range(self.seeds))

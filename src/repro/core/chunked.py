@@ -1,0 +1,169 @@
+"""Shared chunked-``lax.scan`` machinery for the baseline trainers.
+
+The GluADFL engine (``core/gluadfl.py``) runs whole chunks of rounds as
+one donated scan program; this module is the small common core that
+brings the dormant baselines — FedAvg, MAML/MetaSGD, pooled supervised —
+onto the same engine without triplicating the plumbing:
+
+  * :class:`StopState` + :func:`scan_rounds` — the per-run early-stopping
+    state threaded through the scan carry.  With ``patience > 0`` every
+    round body is wrapped in a ``lax.cond`` guarded by the carried
+    ``done`` flag: once the val loss has failed to improve for
+    ``patience`` consecutive evals, later rounds become identity
+    (params frozen bitwise, NaN-sentinel aux) while the scan runs to its
+    static length — the host reads ``stop_round`` once per chunk and
+    stops dispatching.  With ``patience == 0`` (the default) the body
+    scans unwrapped, so the compiled program is the exact loop-engine
+    sequence and the loop-vs-scan parity tests compare identical
+    semantics.
+  * :func:`boundary_val` — the NaN-sentinel streaming-eval branch
+    (``lax.cond`` on the round boundary), same convention as GluADFL's
+    ``_eval_metrics``: off-boundary rounds pay only the predicate and
+    report NaN.
+  * :func:`drain_history` — the once-per-chunk host sync: turns the
+    stacked ``(chunk,)`` losses/vals into per-round history records,
+    truncating after an early stop.
+  * :func:`dispatch_chunk` — the single chokepoint through which every
+    baseline launches a compiled chunk program.  Tests monkeypatch this
+    to COUNT compiled executions — the Table-4 "method grid in <= 4
+    executions" budget is pinned through it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class StopState:
+    """Early-stopping latch carried through the scan.
+
+    ``done`` freezes the run; ``best_val``/``bad_evals`` implement
+    patience; ``stop_round`` records the round the latch tripped
+    (-1 = never) so the host can truncate the history exactly."""
+
+    done: jnp.ndarray        # () bool
+    best_val: jnp.ndarray    # () float32
+    bad_evals: jnp.ndarray   # () int32
+    stop_round: jnp.ndarray  # () int32
+
+
+def init_stop() -> StopState:
+    return StopState(
+        done=jnp.zeros((), jnp.bool_),
+        best_val=jnp.full((), jnp.inf, jnp.float32),
+        bad_evals=jnp.zeros((), jnp.int32),
+        stop_round=jnp.full((), -1, jnp.int32),
+    )
+
+
+def update_stop(stop: StopState, val, t, patience: int) -> StopState:
+    """Fold one round's (possibly NaN-sentinel) val loss into the latch.
+
+    NaN (off-boundary round, or a diverged eval) never improves and
+    never counts against patience — only real evals move the state."""
+    has_val = jnp.isfinite(val)
+    improved = has_val & (val < stop.best_val)
+    best = jnp.where(improved, val, stop.best_val)
+    bad = jnp.where(
+        has_val,
+        jnp.where(improved, jnp.int32(0), stop.bad_evals + 1),
+        stop.bad_evals,
+    )
+    trip = has_val & (bad >= patience) & jnp.logical_not(stop.done)
+    return StopState(
+        done=stop.done | trip,
+        best_val=best,
+        bad_evals=bad,
+        stop_round=jnp.where(trip, jnp.int32(t), stop.stop_round),
+    )
+
+
+def boundary_val(val_fn: Callable, params, t, eval_every: int):
+    """``val_fn(params)`` at ``(t+1) % eval_every == 0`` boundaries, NaN
+    (the host-side sentinel) elsewhere; ``eval_every == 0`` disarms the
+    branch entirely (a compile-time constant NaN)."""
+    if not eval_every:
+        return jnp.full((), jnp.nan, jnp.float32)
+    return jax.lax.cond(
+        (t + 1) % eval_every == 0,
+        lambda p: val_fn(p).astype(jnp.float32),
+        lambda p: jnp.full((), jnp.nan, jnp.float32),
+        params,
+    )
+
+
+def scan_rounds(body: Callable, carry, ts, stop: StopState | None = None,
+                *, patience: int = 0):
+    """Scan ``body(carry, t) -> (carry, (loss, val))`` over the round
+    indices ``ts``.
+
+    Returns ``(carry, stop, (losses, vals))``.  With ``patience == 0``
+    the body scans as-is and ``stop`` passes through as ``None`` — the
+    compiled sequence is bitwise the per-round loop's.  With
+    ``patience > 0`` the body is ``lax.cond``-guarded on the carried
+    :class:`StopState`: stopped rounds return the carry unchanged and
+    NaN aux, and :func:`update_stop` advances the latch from each
+    round's val output."""
+    if not patience:
+        carry, aux = jax.lax.scan(body, carry, ts)
+        return carry, stop, aux
+    if stop is None:
+        stop = init_stop()
+    aux_shapes = jax.eval_shape(lambda c, t: body(c, t)[1], carry, ts[0])
+    nan_aux = jax.tree.map(
+        lambda s: jnp.full(s.shape, jnp.nan, s.dtype), aux_shapes
+    )
+
+    def wrapped(cs, t):
+        def run(op):
+            c0, s0 = op
+            c1, aux = body(c0, t)
+            _, val = aux
+            return (c1, update_stop(s0, val, t, patience)), aux
+
+        def skip(op):
+            return op, nan_aux
+
+        return jax.lax.cond(cs[1].done, skip, run, cs)
+
+    (carry, stop), aux = jax.lax.scan(wrapped, (carry, stop), ts)
+    return carry, stop, aux
+
+
+def dispatch_chunk(chunk_fn: Callable, *args, **kwargs):
+    """Launch one compiled chunk program.
+
+    Every baseline trainer routes its jitted chunk calls through this
+    single chokepoint, so a test can monkeypatch it with a counting
+    wrapper and pin exactly how many compiled executions a workload
+    dispatches (``tests/test_baseline_engines.py`` counts the Table-4
+    method grid at <= 4)."""
+    return chunk_fn(*args, **kwargs)
+
+
+def drain_history(history: list, losses, vals, t0: int, *,
+                  eval_every: int = 0, stop_round: int = -1,
+                  round_key: str = "round", val_key: str = "val_loss") -> bool:
+    """Append one chunk's records to ``history`` (host side, one sync
+    per chunk).  ``losses``/``vals`` are the chunk's ``(c,)`` arrays
+    (``vals`` may be ``None`` when eval is off); rounds after an early
+    stop (``stop_round >= 0``) carry NaN sentinels and are dropped.
+    Returns True once the stop round has been drained."""
+    c = len(losses)
+    for i in range(c):
+        r = t0 + i
+        if 0 <= stop_round < r:
+            return True
+        rec = {round_key: r, "loss": float(losses[i])}
+        if vals is not None and eval_every and (r + 1) % eval_every == 0:
+            rec[val_key] = float(vals[i])
+        history.append(rec)
+    return 0 <= stop_round < t0 + c

@@ -27,6 +27,15 @@ Two long-standing bugs fixed here, both pinned by ``tests/test_baselines``:
     and the scan length must be one static number for the vmap — the
     LARGEST client's epoch defines it).  ``local_epochs=None`` (default)
     keeps ``cfg.local_steps`` as the literal step count.
+
+Engines: ``train(engine="scan")`` (default) runs whole CHUNKS of rounds
+as one donated ``lax.scan`` program dispatched through
+``chunked.dispatch_chunk`` — one host sync per chunk instead of one
+``float(loss)`` per round — with optional streaming eval
+(``val_data`` + ``eval_every``, NaN-sentinel off-boundary) and
+``lax.cond``-guarded early stopping (``early_stop_patience``).
+``engine="loop"`` keeps the original per-round jit loop; the two are
+pinned bitwise-equal by ``tests/test_baseline_engines.py``.
 """
 from __future__ import annotations
 
@@ -36,12 +45,18 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import FLConfig
+from repro.core import chunked
 from repro.models.base import Model
 from repro.optim import Optimizer
 
 PyTree = Any
+
+# Default rounds-per-compiled-execution for engine="scan"; the driver
+# clamps it to the requested round count, so short runs compile once.
+DEFAULT_CHUNK = 128
 
 
 class FedAvg:
@@ -66,6 +81,15 @@ class FedAvg:
         # local_steps is static: the scan length is program structure
         self._round_jit = jax.jit(
             self._round, static_argnames=("batch_size", "local_steps")
+        )
+        self._val_jit = jax.jit(self._val_loss)
+        # carry (key, params) and stop state are donated: round t+1's
+        # buffers reuse round t's in place across chunk dispatches
+        self._chunk_jit = jax.jit(
+            self._train_chunk,
+            static_argnames=("batch_size", "local_steps", "chunk",
+                             "eval_every", "patience"),
+            donate_argnums=(0, 1),
         )
 
     def resolve_local_steps(self, counts, batch_size: int) -> int:
@@ -122,17 +146,87 @@ class FedAvg:
         loss = jnp.sum(losses * active) / jnp.maximum(jnp.sum(active), 1.0)
         return key, new_params, loss
 
-    def train(self, key, x, y, counts, *, batch_size: int = 64, rounds: int | None = None):
-        rounds = rounds if rounds is not None else self.cfg.rounds
-        local_steps = self.resolve_local_steps(counts, batch_size)
-        x, y, counts = jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
-        key, k_init = jax.random.split(key)
-        params = self.model.init(k_init)
-        history = []
-        for t in range(rounds):
-            key, params, loss = self._round_jit(
+    def _val_loss(self, params, val_x, val_y):
+        pred = self.model.apply(params, val_x)
+        return jnp.mean(jnp.square(pred - val_y))
+
+    def _train_chunk(self, carry, stop, x, y, counts, val_x, val_y, t0, *,
+                     batch_size: int, local_steps: int, chunk: int,
+                     eval_every: int, patience: int):
+        """One compiled chunk: scan ``chunk`` rounds from global round
+        ``t0`` (traced, so every chunk shares one executable)."""
+
+        def body(c, t):
+            key, params = c
+            key, params, loss = self._round(
                 key, params, x, y, counts,
                 batch_size=batch_size, local_steps=local_steps,
             )
-            history.append({"round": t, "loss": float(loss)})
+            val = chunked.boundary_val(
+                lambda p: self._val_loss(p, val_x, val_y), params, t, eval_every
+            )
+            return (key, params), (loss, val)
+
+        ts = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        return chunked.scan_rounds(body, carry, ts, stop, patience=patience)
+
+    def train(self, key, x, y, counts, *, batch_size: int = 64,
+              rounds: int | None = None, engine: str = "scan",
+              chunk: int | None = None, val_data=None, eval_every: int = 0,
+              early_stop_patience: int = 0):
+        """Train the federation.  ``engine="scan"`` (default) dispatches
+        compiled chunks through ``chunked.dispatch_chunk``;
+        ``engine="loop"`` is the original per-round jit loop (kept as the
+        parity oracle).  ``val_data=(vx, vy)`` + ``eval_every=k`` records
+        ``val_loss`` every k rounds; ``early_stop_patience=p`` (scan
+        engine) stops after p consecutive non-improving evals."""
+        if engine not in ("scan", "loop"):
+            raise ValueError(f"unknown engine {engine!r}")
+        rounds = rounds if rounds is not None else self.cfg.rounds
+        local_steps = self.resolve_local_steps(counts, batch_size)
+        x, y, counts = jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
+        val_x = val_y = None
+        if val_data is not None:
+            val_x, val_y = (jnp.asarray(v) for v in val_data)
+        do_eval = bool(eval_every) and val_data is not None
+        if early_stop_patience and not do_eval:
+            raise ValueError(
+                "early_stop_patience requires val_data and eval_every"
+            )
+        key, k_init = jax.random.split(key)
+        params = self.model.init(k_init)
+        history = []
+        if engine == "loop":
+            for t in range(rounds):
+                key, params, loss = self._round_jit(
+                    key, params, x, y, counts,
+                    batch_size=batch_size, local_steps=local_steps,
+                )
+                rec = {"round": t, "loss": float(loss)}
+                if do_eval and (t + 1) % eval_every == 0:
+                    rec["val_loss"] = float(self._val_jit(params, val_x, val_y))
+                history.append(rec)
+            return params, history
+        chunk = max(1, min(chunk or DEFAULT_CHUNK, rounds))
+        carry = (key, params)
+        stop = chunked.init_stop() if early_stop_patience else None
+        t = 0
+        while t < rounds:
+            c = min(chunk, rounds - t)
+            carry, stop, (losses, vals) = chunked.dispatch_chunk(
+                self._chunk_jit, carry, stop, x, y, counts, val_x, val_y,
+                jnp.int32(t), batch_size=batch_size, local_steps=local_steps,
+                chunk=c, eval_every=eval_every if do_eval else 0,
+                patience=early_stop_patience,
+            )
+            sr = int(np.asarray(stop.stop_round)) if stop is not None else -1
+            stopped = chunked.drain_history(
+                history, np.asarray(losses),
+                np.asarray(vals) if do_eval else None, t,
+                eval_every=eval_every if do_eval else 0, stop_round=sr,
+            )
+            t += c
+            if stopped:
+                break
+        _, params = carry
         return params, history

@@ -87,6 +87,31 @@ the same config — swept results ARE the serial results, just batched
 (``tests/test_sweep.py`` pins the parity; ``benchmarks/rounds_per_sec``
 prices the speedup as the ``sweep-scan`` row).
 
+Beyond the classic three axes the grid optionally sweeps the scenario
+dimensions the paper's robustness story turns on, each as a traced
+``(G,)`` array that arms independently (``SweepGrid.build(...,
+schedules=, skews=, dp_sigmas=)``):
+
+  * **Markov-sticky staleness** — per-scenario schedule choice between
+    iid bernoulli participation and ``async_sched.markov_active``'s
+    sticky busy/free chain.  Both schedules read the same single
+    ``uniform(k_act, (N,))`` draw, so the choice is a ``jnp.where``
+    select with zero key-stream drift; the serial twin is
+    ``FLConfig(schedule="markov")``.
+  * **Non-IID data skew** — node ``i`` trains on batches shifted by
+    ``skew_g * data.synth.node_skew_offsets(N)[i]``; bitwise equal to
+    training on host-pre-shifted arrays (gather commutes with the add),
+    so the serial twin is a plain ``train()`` on skewed data
+    (``FLConfig(data_skew=...)`` for the config-driven path).
+  * **DP noise level** — the local-DP sigma as a traced scalar fed to
+    ``_gossip_base``; the DP key split arms uniformly across a dp-armed
+    grid so every scenario (including sigma=0) keeps one key stream,
+    and the serial twin is ``GluADFL(dp_noise_sigma=sigma_g)``.
+
+``tests/test_sweep_axes.py`` pins each axis against its serial twin
+(losses, params, eval records, bitwise key chains) — those tests fail
+if any axis' plumbing is reverted.
+
 The sweep has a second engine for fleet scale: with ``mixer="sharded"``
 the grid axis becomes a REAL mesh axis — the ``(G, N, ...)`` stacked
 state lives on a 2-D ``("grid", "node")`` mesh
@@ -108,7 +133,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FLConfig
-from repro.core.async_sched import bernoulli_active, staleness_update
+from repro.core.async_sched import bernoulli_active, markov_active, staleness_update
 from repro.core.gossip import (
     gossip_mix_dp_kernel,
     gossip_mix_kernel,
@@ -130,6 +155,7 @@ from repro.core.topology import (
     round_adjacency,
     stacked_adjacency,
 )
+from repro.data.synth import node_skew_offsets
 from repro.models.base import Model
 from repro.optim import Optimizer
 from repro.utils.pytree import tree_mean
@@ -168,7 +194,10 @@ class FLState:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("adjacency", "resample", "inactive_ratio", "init_keys"),
+    data_fields=(
+        "adjacency", "resample", "inactive_ratio", "init_keys",
+        "markov", "skew", "dp_sigma",
+    ),
     meta_fields=("labels",),
 )
 @dataclass
@@ -187,8 +216,26 @@ class SweepGrid:
       * ``init_keys``      — (G, 2) per-scenario PRNG init keys
                              (``PRNGKey(seed)`` — the exact key a serial
                              ``train(PRNGKey(seed), ...)`` run would use);
-      * ``labels``         — static tuple of ``(topology, ratio, seed)``
-                             naming scenario g for the host side.
+      * ``labels``         — static tuple naming scenario g for the host
+                             side: ``(topology, ratio, seed)`` for a
+                             classic 3-axis grid, ``(topology, ratio,
+                             schedule, skew, dp_sigma, seed)`` once any
+                             optional axis is armed (:meth:`label_dict`
+                             normalizes either form).
+
+    The optional scenario axes are each ``None`` (axis unarmed — the
+    round body compiles the identical program as before the axis
+    existed) or a ``(G,)`` array:
+
+      * ``markov``         — {0,1}: 1 = Markov-sticky participation
+                             (``async_sched.markov_active``) instead of
+                             the bernoulli schedule;
+      * ``skew``           — non-IID data-skew strength: node ``i``
+                             trains on batches shifted by
+                             ``skew * node_skew_offsets(N)[i]``;
+      * ``dp_sigma``       — local-DP gossip noise sigma (traced; the
+                             key stream arms the DP split for EVERY
+                             scenario of a dp-armed grid).
     """
 
     adjacency: jnp.ndarray
@@ -196,10 +243,31 @@ class SweepGrid:
     inactive_ratio: jnp.ndarray
     init_keys: jnp.ndarray
     labels: tuple
+    markov: jnp.ndarray | None = None
+    skew: jnp.ndarray | None = None
+    dp_sigma: jnp.ndarray | None = None
 
     @property
     def size(self) -> int:
         return len(self.labels)
+
+    def label_dict(self, g: int) -> dict:
+        """Scenario ``g``'s knobs as a dict, normalizing 3-tuple
+        (classic grid) and 6-tuple (axis-armed grid) labels."""
+        lab = self.labels[g]
+        if len(lab) == 3:
+            topo, ratio, seed = lab
+            sched, skew, dp = "bernoulli", 0.0, 0.0
+        else:
+            topo, ratio, sched, skew, dp, seed = lab
+        return {
+            "topology": topo,
+            "inactive_ratio": ratio,
+            "schedule": sched,
+            "skew": skew,
+            "dp_sigma": dp,
+            "seed": seed,
+        }
 
     @classmethod
     def build(
@@ -210,29 +278,71 @@ class SweepGrid:
         *,
         num_nodes: int,
         cluster_size: int = 4,
+        schedules=None,
+        skews=None,
+        dp_sigmas=None,
     ) -> "SweepGrid":
-        """Cross-product grid (topology-major, then ratio, then seed) —
-        the paper's Fig-5 layout: ``build(("ring","cluster","random"),
-        (0.0, 0.3, 0.5, 0.7, 0.9), num_nodes=N)``."""
+        """Cross-product grid (topology-major, then ratio, then
+        schedule/skew/dp_sigma, seed innermost) — the paper's Fig-5
+        layout: ``build(("ring","cluster","random"),
+        (0.0, 0.3, 0.5, 0.7, 0.9), num_nodes=N)``.
+
+        Each optional axis arms independently: ``None`` (default) keeps
+        it out of the cross product AND out of the compiled program, so
+        a classic grid stays bitwise the pre-axis engine.  Labels stay
+        3-tuples unless some axis is armed (then 6-tuples)."""
+        sched_ax = tuple(str(s) for s in schedules) if schedules else None
+        if sched_ax is not None:
+            bad = [s for s in sched_ax if s not in ("bernoulli", "markov")]
+            if bad:
+                raise ValueError(f"unknown schedule(s) {bad!r}")
+        skew_ax = tuple(float(v) for v in skews) if skews else None
+        dp_ax = tuple(float(v) for v in dp_sigmas) if dp_sigmas else None
+        armed = any(ax is not None for ax in (sched_ax, skew_ax, dp_ax))
         scenarios = [
-            (str(t), float(r), int(s))
+            (str(t), float(r), sc, sk, dp, int(s))
             for t in topologies
             for r in inactive_ratios
+            for sc in (sched_ax or ("bernoulli",))
+            for sk in (skew_ax or (0.0,))
+            for dp in (dp_ax or (0.0,))
             for s in seeds
         ]
         if not scenarios:
             raise ValueError("empty sweep grid")
         adjacency, resample = stacked_adjacency(
-            [t for t, _, _ in scenarios], num_nodes, cluster_size
+            [t for t, *_ in scenarios], num_nodes, cluster_size
         )
         return cls(
             adjacency=adjacency,
             resample=resample,
-            inactive_ratio=jnp.asarray([r for _, r, _ in scenarios], jnp.float32),
+            inactive_ratio=jnp.asarray([r for _, r, *_ in scenarios], jnp.float32),
             init_keys=jnp.stack(
-                [jax.random.PRNGKey(s) for _, _, s in scenarios]
+                [jax.random.PRNGKey(s) for *_, s in scenarios]
             ),
-            labels=tuple(scenarios),
+            labels=tuple(
+                scenarios
+                if armed
+                else [(t, r, s) for t, r, _, _, _, s in scenarios]
+            ),
+            markov=(
+                None
+                if sched_ax is None
+                else jnp.asarray(
+                    [1.0 if sc == "markov" else 0.0 for _, _, sc, _, _, _ in scenarios],
+                    jnp.float32,
+                )
+            ),
+            skew=(
+                None
+                if skew_ax is None
+                else jnp.asarray([sk for _, _, _, sk, _, _ in scenarios], jnp.float32)
+            ),
+            dp_sigma=(
+                None
+                if dp_ax is None
+                else jnp.asarray([dp for _, _, _, _, dp, _ in scenarios], jnp.float32)
+            ),
         )
 
 
@@ -417,12 +527,16 @@ class GluADFL:
         g_only = NamedSharding(mesh, P(g_ax))
         node = NamedSharding(mesh, P(n_ax))
         repl = NamedSharding(mesh, P())
+        put_ax = lambda v: None if v is None else jax.device_put(v, g_only)
         grid = SweepGrid(
             adjacency=jax.device_put(grid.adjacency, g_only),
             resample=jax.device_put(grid.resample, g_only),
             inactive_ratio=jax.device_put(grid.inactive_ratio, g_only),
             init_keys=jax.device_put(grid.init_keys, g_only),
             labels=grid.labels,
+            markov=put_ax(grid.markov),
+            skew=put_ax(grid.skew),
+            dp_sigma=put_ax(grid.dp_sigma),
         )
         x, y, counts = (jax.device_put(v, node) for v in (x, y, counts))
         if val_x is not None:
@@ -435,12 +549,25 @@ class GluADFL:
         idx = jax.random.randint(key, (batch_size,), 0, jnp.maximum(count, 1))
         return x_node[idx], y_node[idx]
 
-    def _local_step(self, key, params_premix, params_mixed, opt_state, x, y, count, batch_size):
-        """One (or more) local SGD steps for a single node."""
+    def _local_step(
+        self, key, params_premix, params_mixed, opt_state, x, y, count,
+        shift=None, *, batch_size,
+    ):
+        """One (or more) local SGD steps for a single node.
+
+        ``shift`` (a per-node scalar, or ``None``) is the non-IID skew
+        axis: it offsets the sampled batch — inputs AND targets — in
+        (normalized) glucose units.  Shifting the gathered batch is
+        bitwise-identical to gathering from host-pre-shifted arrays
+        (``(x + c)[idx] == x[idx] + c``), which is what makes a skewed
+        scenario's serial twin a plain ``train()`` on shifted data."""
 
         def one_step(carry, k):
             p_for_grad, p_apply, st = carry
             bx, by = self._sample_batch(k, x, y, count, batch_size)
+            if shift is not None:
+                bx = bx + shift
+                by = by + shift
             loss, grads = jax.value_and_grad(self.loss_fn)(p_for_grad, bx, by)
             new_p, new_st = self.optimizer.update(grads, st, p_apply)
             # subsequent local steps are ordinary SGD at the new params
@@ -487,7 +614,10 @@ class GluADFL:
             )
         return gossip_mix_tree(stacked, mix)
 
-    def _gossip(self, premix: PyTree, mix: Any, active, k_dp, mesh=None, mask_ctx=None) -> PyTree:
+    def _gossip(
+        self, premix: PyTree, mix: Any, active, k_dp, mesh=None, mask_ctx=None,
+        dp_sigma=None,
+    ) -> PyTree:
         """Steps 2+3 (+ optional local-DP broadcast noise, + optional
         pairwise-masked secure aggregation).  ``mask_ctx`` is the
         ``(mask_key, (idx, wgt))`` pair ``_round`` builds for
@@ -495,19 +625,30 @@ class GluADFL:
         FINAL mixed state — after the DP composition too, so masked runs
         stay bitwise twins of their unmasked counterparts on every
         mixer/repr/DP combination."""
-        out = self._gossip_base(premix, mix, active, k_dp, mesh)
+        out = self._gossip_base(premix, mix, active, k_dp, mesh, dp_sigma)
         if mask_ctx is not None:
             k_mask, (t_idx, t_wgt) = mask_ctx
             out = gossip_mix_masked(out, t_idx, t_wgt, k_mask)
         return out
 
-    def _gossip_base(self, premix: PyTree, mix: Any, active, k_dp, mesh=None) -> PyTree:
-        """The unmasked gossip: plain mix, or the local-DP composition."""
-        if self.dp_noise_sigma <= 0.0:
+    def _gossip_base(
+        self, premix: PyTree, mix: Any, active, k_dp, mesh=None, dp_sigma=None
+    ) -> PyTree:
+        """The unmasked gossip: plain mix, or the local-DP composition.
+
+        ``dp_sigma`` overrides the trainer's ``dp_noise_sigma``: a python
+        float (config path) keeps the concrete ``<= 0`` shortcut; a
+        TRACED per-scenario scalar (the sweep's DP axis) always takes the
+        noise path — a ``sigma=0`` scenario then contracts exact-zero
+        noise, which the DP-off property test pins as bitwise-clean."""
+        if dp_sigma is None:
+            dp_sigma = self.dp_noise_sigma
+        concrete_off = isinstance(dp_sigma, (int, float)) and dp_sigma <= 0.0
+        if k_dp is None or concrete_off:
             return self._plain_mix(premix, mix, mesh, active)
         noise_keys = split_like(k_dp, premix)
         noise = jax.tree.map(
-            lambda w, k_: self.dp_noise_sigma * jax.random.normal(k_, w.shape, w.dtype),
+            lambda w, k_: dp_sigma * jax.random.normal(k_, w.shape, w.dtype),
             premix, noise_keys,
         )
         if self.mixer == "kernel":
@@ -629,10 +770,18 @@ class GluADFL:
 
         ``scenario`` is ``None`` for the config-driven path, or a traced
         ``(adjacency (N,N), resample scalar, inactive_ratio scalar)``
-        triple overriding the config's topology/asynchrony — the sweep
-        engine vmaps this body over a stacked grid of such triples.  The
-        key stream is IDENTICAL either way (every round splits the same
-        four subkeys), so a swept scenario reproduces its serial twin.
+        triple — optionally extended to a 6-tuple ``(..., markov, skew,
+        dp_sigma)`` whose last three entries are each ``None`` (axis
+        unarmed; the identical program as the triple) or a traced
+        per-scenario scalar — overriding the config's topology/
+        asynchrony/heterogeneity/privacy knobs.  The sweep engine vmaps
+        this body over a stacked grid of such tuples.  The key stream is
+        IDENTICAL either way: every round splits the same four subkeys;
+        the markov and bernoulli schedules consume the SAME single
+        ``uniform(k_act, (N,))`` draw, and the DP split is armed
+        uniformly across a dp-armed grid — so a swept scenario
+        reproduces its serial twin (``schedule=cfg.schedule``,
+        ``data_skew``, ``dp_noise_sigma=sigma_g``) exactly.
 
         ``mesh`` (static) overrides the sharded mixer's mesh — the
         swept-sharded path threads the 2-D (grid, node) sweep mesh down
@@ -642,8 +791,23 @@ class GluADFL:
         n = cfg.num_nodes
         key, k_act, k_top, k_batch = jax.random.split(state.key, 4)
 
+        sc_markov = sc_skew = sc_dp = None
+        if scenario is not None and len(scenario) == 6:
+            adj_static, resample, inactive_ratio, sc_markov, sc_skew, sc_dp = scenario
+        elif scenario is not None:
+            adj_static, resample, inactive_ratio = scenario
+
+        # a node that ended last round with staleness 0 participated in
+        # it — the markov chain's previous state, derivable in the swept
+        # and serial paths alike (staleness is carried in FLState)
+        prev_active = (state.staleness == 0).astype(jnp.float32)
         if scenario is None:
-            active = bernoulli_active(k_act, n, cfg.inactive_ratio)
+            if cfg.schedule == "markov":
+                active = markov_active(
+                    k_act, prev_active, cfg.p_stay_active, cfg.p_stay_inactive
+                )
+            else:
+                active = bernoulli_active(k_act, n, cfg.inactive_ratio)
             if self._neighbor_cand is not None:
                 # sparse static topology: table straight from the host-
                 # built candidate lists — no (N, N) array in the program
@@ -657,8 +821,19 @@ class GluADFL:
                 )
                 mix = self._mix_repr(adj, active)
         else:
-            adj_static, resample, inactive_ratio = scenario
-            active = bernoulli_active(k_act, n, inactive_ratio)
+            if sc_markov is None:
+                active = bernoulli_active(k_act, n, inactive_ratio)
+            else:
+                # per-scenario schedule choice as a select: both masks
+                # read the SAME uniform(k_act, (N,)) draw, so arming the
+                # axis never shifts the main key chain
+                active = jnp.where(
+                    sc_markov > 0,
+                    markov_active(
+                        k_act, prev_active, cfg.p_stay_active, cfg.p_stay_inactive
+                    ),
+                    bernoulli_active(k_act, n, inactive_ratio),
+                )
             # both graph flavours are cheap relative to the local step, so
             # the data-dependent choice is a select, not a cond: random
             # topologies draw from the SAME k_top a serial run would use
@@ -671,7 +846,7 @@ class GluADFL:
 
         premix = state.params
         k_dp = None
-        if self.dp_noise_sigma > 0.0:
+        if sc_dp is not None or self.dp_noise_sigma > 0.0:
             key, k_dp = jax.random.split(key)
         mask_ctx = None
         if self.gossip_impl == "masked":
@@ -688,12 +863,22 @@ class GluADFL:
                 else neighbor_table(adj, active, cfg.comm_batch)
             )
             mask_ctx = (k_mask, table)
-        mixed = self._gossip(premix, mix, active, k_dp, mesh, mask_ctx)
+        mixed = self._gossip(premix, mix, active, k_dp, mesh, mask_ctx, sc_dp)
 
         node_keys = jax.random.split(k_batch, n)
-        new_params, new_opt, losses = jax.vmap(
-            partial(self._local_step, batch_size=batch_size)
-        )(node_keys, premix, mixed, state.opt_state, x, y, counts)
+        step = partial(self._local_step, batch_size=batch_size)
+        if sc_skew is None and cfg.data_skew == 0.0:
+            new_params, new_opt, losses = jax.vmap(step)(
+                node_keys, premix, mixed, state.opt_state, x, y, counts
+            )
+        else:
+            # per-node batch shift: the offsets are a trace-time constant
+            # table, scaled by the (possibly traced) scenario skew
+            skew = cfg.data_skew if sc_skew is None else sc_skew
+            shift = skew * jnp.asarray(node_skew_offsets(n))
+            new_params, new_opt, losses = jax.vmap(step)(
+                node_keys, premix, mixed, state.opt_state, x, y, counts, shift
+            )
 
         # inactive nodes keep their stale params / optimizer state.
         # jnp.where (not arithmetic blending) so inactive rows are BITWISE
@@ -761,6 +946,7 @@ class GluADFL:
         adjacency,
         resample,
         inactive_ratio,
+        extras,
         x,
         y,
         counts,
@@ -777,8 +963,12 @@ class GluADFL:
         grid axis G batches the whole ``_train_chunk`` program (states,
         adjacencies, resample flags and inactive ratios all carry a
         leading G), while the federation data/validation set broadcast
-        unbatched.  Returns ``(states, losses (G, chunk))`` — plus a
-        metrics dict of ``(G, chunk)`` records when eval is armed.
+        unbatched.  ``extras`` is a dict holding whichever optional
+        scenario axes are armed (``"markov"``/``"skew"``/``"dp_sigma"``,
+        each ``(G,)``) — an empty dict compiles the identical program as
+        the classic 3-axis grid.  Returns ``(states, losses (G, chunk))``
+        — plus a metrics dict of ``(G, chunk)`` records when eval is
+        armed.
 
         Mixer dispatch: the tree mixer is a plain ``jax.vmap``.  The
         SHARDED mixer instead binds the vmapped axis to the 2-D sweep
@@ -789,18 +979,22 @@ class GluADFL:
         ``P("grid", ...)`` — the grid axis batches, the node axis
         communicates, and no collective crosses scenarios."""
 
-        def one(state, adj, rs, ratio):
+        def one(state, adj, rs, ratio, extra):
+            sc = (
+                adj, rs, ratio,
+                extra.get("markov"), extra.get("skew"), extra.get("dp_sigma"),
+            )
             return self._train_chunk(
-                state, x, y, counts, val_x, val_y, (adj, rs, ratio),
+                state, x, y, counts, val_x, val_y, sc,
                 batch_size=batch_size, chunk=chunk,
                 eval_every=eval_every, eval_fn=eval_fn, mesh=mesh,
             )
 
         if self.mixer == "sharded":
             return jax.vmap(one, spmd_axis_name=mesh.axis_names[0])(
-                states, adjacency, resample, inactive_ratio
+                states, adjacency, resample, inactive_ratio, extras
             )
-        return jax.vmap(one)(states, adjacency, resample, inactive_ratio)
+        return jax.vmap(one)(states, adjacency, resample, inactive_ratio, extras)
 
     def train_chunk(
         self,
@@ -1099,6 +1293,17 @@ class GluADFL:
                 mesh, grid, x, y, counts, val_x, val_y
             )
         g_count = grid.size
+        # only armed axes enter the program: an unarmed grid's extras
+        # dict is empty and the compiled sweep is the classic one
+        extras = {
+            k: v
+            for k, v in (
+                ("markov", grid.markov),
+                ("skew", grid.skew),
+                ("dp_sigma", grid.dp_sigma),
+            )
+            if v is not None
+        }
         histories: list[list[dict]] = [[] for _ in range(g_count)]
         chunk = max(1, min(chunk or DEFAULT_CHUNK, rounds))
         full, rem = divmod(rounds, chunk)
@@ -1106,7 +1311,7 @@ class GluADFL:
         for c in [chunk] * full + ([rem] if rem else []):
             states, aux = self._sweep_chunk_jit(
                 states, grid.adjacency, grid.resample, grid.inactive_ratio,
-                x, y, counts, val_x, val_y,
+                extras, x, y, counts, val_x, val_y,
                 batch_size=batch_size, chunk=c,
                 eval_every=eval_every if do_eval else 0,
                 eval_fn=resolved, mesh=mesh,

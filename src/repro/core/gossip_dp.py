@@ -161,25 +161,47 @@ def ring_mix_params(params: PyTree, mesh: Mesh, node_axes: tuple[str, ...],
 
 
 class GossipDPSchedule:
-    """Host-side schedule: which rounds mix, and with which matrix."""
+    """Host-side schedule: which rounds mix, and with which matrix.
+
+    ``schedule`` picks the participation process the mixing matrix is
+    drawn under — ``"bernoulli"`` (iid per round, the default) or
+    ``"markov"`` (sticky busy/free: ``async_sched.markov_active`` with
+    the previous round's mask carried across ``next_mix`` calls) — the
+    same two schedules the trainer's sweep axis batches."""
 
     def __init__(self, topology: str, num_nodes: int, comm_batch: int = 7,
-                 mix_every: int = 1, inactive_ratio: float = 0.0, seed: int = 0):
+                 mix_every: int = 1, inactive_ratio: float = 0.0, seed: int = 0,
+                 schedule: str = "bernoulli", p_stay_active: float = 0.9,
+                 p_stay_inactive: float = 0.7):
+        if schedule not in ("bernoulli", "markov"):
+            raise ValueError(f"unknown schedule {schedule!r}")
         self.topology = topology
         self.num_nodes = num_nodes
         self.comm_batch = comm_batch
         self.mix_every = mix_every
         self.inactive_ratio = inactive_ratio
+        self.schedule = schedule
+        self.p_stay_active = p_stay_active
+        self.p_stay_inactive = p_stay_inactive
         self.key = jax.random.PRNGKey(seed)
+        # the chain starts all-active, matching the trainer's convention
+        # (fresh FLState staleness is all zeros)
+        self.prev_active = jnp.ones((num_nodes,), jnp.float32)
 
     def should_mix(self, step: int) -> bool:
         return (step + 1) % self.mix_every == 0
 
     def next_mix(self) -> jnp.ndarray:
         self.key, k_top, k_act = jax.random.split(self.key, 3)
-        from repro.core.async_sched import bernoulli_active
+        from repro.core.async_sched import bernoulli_active, markov_active
 
-        active = bernoulli_active(k_act, self.num_nodes, self.inactive_ratio)
+        if self.schedule == "markov":
+            active = markov_active(
+                k_act, self.prev_active, self.p_stay_active, self.p_stay_inactive
+            )
+        else:
+            active = bernoulli_active(k_act, self.num_nodes, self.inactive_ratio)
+        self.prev_active = active
         adj = round_adjacency(
             self.topology, self.num_nodes, k_top, self.comm_batch
         )

@@ -5,6 +5,12 @@ adapts in a few inner SGD steps; MetaSGD (Li et al.) additionally learns
 a per-parameter inner learning rate.  The paper evaluates both WITHOUT
 test-time fine-tuning (population-model setting), which we reproduce:
 ``population_params`` returns the meta-initialization directly.
+
+Engines: ``train(engine="scan")`` (default) runs chunks of meta-steps as
+one donated ``lax.scan`` dispatched through ``chunked.dispatch_chunk``
+(one host sync per chunk), with streaming eval and ``lax.cond``-guarded
+early stopping; ``engine="loop"`` keeps the per-step jit loop as the
+parity oracle (``tests/test_baseline_engines.py`` pins them bitwise).
 """
 from __future__ import annotations
 
@@ -13,7 +19,10 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import chunked
+from repro.core.fedavg import DEFAULT_CHUNK
 from repro.models.base import Model
 from repro.optim import Optimizer
 
@@ -40,6 +49,12 @@ class MAML:
             lambda p, x, y: jnp.mean(jnp.square(model.apply(p, x) - y))
         )
         self._step_jit = jax.jit(self._meta_step, static_argnames=("batch_size",))
+        self._val_jit = jax.jit(self._val_loss)
+        self._chunk_jit = jax.jit(
+            self._train_chunk,
+            static_argnames=("batch_size", "chunk", "eval_every", "patience"),
+            donate_argnums=(0, 1),
+        )
 
     # -- inner adaptation ---------------------------------------------
     def _adapt(self, params, lrs, key, x, y, count, batch_size):
@@ -80,9 +95,48 @@ class MAML:
         new_params, meta_state = self.meta_opt.update(gp, meta_state, params)
         return new_params, lrs, meta_state, loss
 
+    # -- scan engine ----------------------------------------------------
+    def _val_loss(self, params, val_x, val_y):
+        pred = self.model.apply(params, val_x)
+        return jnp.mean(jnp.square(pred - val_y))
+
+    def _train_chunk(self, carry, stop, x, y, counts, val_x, val_y, t0, *,
+                     batch_size: int, chunk: int, eval_every: int,
+                     patience: int):
+        def body(c, t):
+            key, params, lrs, meta_state = c
+            key, sub = jax.random.split(key)
+            params, lrs, meta_state, loss = self._meta_step(
+                sub, params, lrs, meta_state, x, y, counts,
+                batch_size=batch_size,
+            )
+            val = chunked.boundary_val(
+                lambda p: self._val_loss(p, val_x, val_y), params, t, eval_every
+            )
+            return (key, params, lrs, meta_state), (loss, val)
+
+        ts = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        return chunked.scan_rounds(body, carry, ts, stop, patience=patience)
+
     # -- driver ---------------------------------------------------------
-    def train(self, key, x, y, counts, *, batch_size: int = 64, steps: int = 100):
+    def train(self, key, x, y, counts, *, batch_size: int = 64,
+              steps: int = 100, engine: str = "scan",
+              chunk: int | None = None, val_data=None, eval_every: int = 0,
+              early_stop_patience: int = 0):
+        """Meta-train.  ``engine="scan"`` (default) dispatches compiled
+        chunks through ``chunked.dispatch_chunk``; ``engine="loop"`` is
+        the original per-step jit loop (the parity oracle)."""
+        if engine not in ("scan", "loop"):
+            raise ValueError(f"unknown engine {engine!r}")
         x, y, counts = jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
+        val_x = val_y = None
+        if val_data is not None:
+            val_x, val_y = (jnp.asarray(v) for v in val_data)
+        do_eval = bool(eval_every) and val_data is not None
+        if early_stop_patience and not do_eval:
+            raise ValueError(
+                "early_stop_patience requires val_data and eval_every"
+            )
         key, k_init = jax.random.split(key)
         params = self.model.init(k_init)
         lrs = jax.tree.map(lambda l: jnp.full_like(l, self.inner_lr), params)
@@ -92,12 +146,40 @@ class MAML:
             else self.meta_opt.init(params)
         )
         history = []
-        for t in range(steps):
-            key, sub = jax.random.split(key)
-            params, lrs, meta_state, loss = self._step_jit(
-                sub, params, lrs, meta_state, x, y, counts, batch_size=batch_size
+        if engine == "loop":
+            for t in range(steps):
+                key, sub = jax.random.split(key)
+                params, lrs, meta_state, loss = self._step_jit(
+                    sub, params, lrs, meta_state, x, y, counts,
+                    batch_size=batch_size,
+                )
+                rec = {"round": t, "loss": float(loss)}
+                if do_eval and (t + 1) % eval_every == 0:
+                    rec["val_loss"] = float(self._val_jit(params, val_x, val_y))
+                history.append(rec)
+            return params, lrs, history
+        chunk = max(1, min(chunk or DEFAULT_CHUNK, steps))
+        carry = (key, params, lrs, meta_state)
+        stop = chunked.init_stop() if early_stop_patience else None
+        t = 0
+        while t < steps:
+            c = min(chunk, steps - t)
+            carry, stop, (losses, vals) = chunked.dispatch_chunk(
+                self._chunk_jit, carry, stop, x, y, counts, val_x, val_y,
+                jnp.int32(t), batch_size=batch_size, chunk=c,
+                eval_every=eval_every if do_eval else 0,
+                patience=early_stop_patience,
             )
-            history.append({"round": t, "loss": float(loss)})
+            sr = int(np.asarray(stop.stop_round)) if stop is not None else -1
+            stopped = chunked.drain_history(
+                history, np.asarray(losses),
+                np.asarray(vals) if do_eval else None, t,
+                eval_every=eval_every if do_eval else 0, stop_round=sr,
+            )
+            t += c
+            if stopped:
+                break
+        _, params, lrs, _ = carry
         return params, lrs, history
 
 

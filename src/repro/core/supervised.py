@@ -1,19 +1,83 @@
 """Traditional supervised learning on MIXED data (paper Table 3 / §4.4):
 all patients' training windows pooled on one "server".  The privacy-free
 upper-bound baseline the paper compares FL against.
+
+Engines: ``engine="scan"`` (default) runs chunks of SGD steps as one
+donated ``lax.scan`` dispatched through ``chunked.dispatch_chunk`` —
+best-checkpoint tracking moves into the carry as ``jnp.where``
+tree-selects so the whole run needs one host sync per chunk —
+with optional ``lax.cond``-guarded early stopping
+(``early_stop_patience``).  ``engine="loop"`` keeps the original
+per-step jit loop as the parity oracle
+(``tests/test_baseline_engines.py`` pins the two bitwise-equal).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import chunked
+from repro.core.fedavg import DEFAULT_CHUNK
 from repro.models.base import Model
 from repro.optim import Optimizer
 
 PyTree = Any
+
+
+@functools.lru_cache(maxsize=32)
+def _build_engine(model: Model, optimizer: Optimizer,
+                  loss_fn: Callable | None, batch_size: int):
+    """Jitted step/val/chunk fns for a (model, optimizer, loss, batch) tuple.
+
+    ``Model`` and ``Optimizer`` are frozen dataclasses, so the cache key is
+    hashable; data arrays are jit *arguments* rather than closure captures,
+    which lets repeat ``train_supervised`` calls (e.g. the Table-4 grid run
+    back-to-back per engine) reuse the compiled executables instead of
+    re-tracing per call.
+    """
+    if loss_fn is None:
+        loss_fn = lambda p, bx, by: jnp.mean(jnp.square(model.apply(p, bx) - by))
+
+    def step_core(p, st, k, x, y):
+        idx = jax.random.randint(k, (batch_size,), 0, x.shape[0])
+        loss, grads = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
+        p, st = optimizer.update(grads, st, p)
+        return p, st, loss
+
+    def val_loss(p, val_x, val_y):
+        return jnp.mean(jnp.square(model.apply(p, val_x) - val_y))
+
+    def train_chunk(carry, stop, x, y, val_x, val_y, t0, *,
+                    chunk, eval_every, patience):
+        def body(c, t):
+            key, p, st, best_v, best_p = c
+            key, sub = jax.random.split(key)
+            p, st, loss = step_core(p, st, sub, x, y)
+            v = chunked.boundary_val(
+                lambda q: val_loss(q, val_x, val_y), p, t, eval_every)
+            # NaN val never improves (comparison is False), matching the
+            # loop engine's host-side `vloss < best_val`
+            improved = v < best_v
+            best_v = jnp.where(improved, v, best_v)
+            best_p = jax.tree.map(
+                lambda a, b: jnp.where(improved, a, b), p, best_p
+            )
+            return (key, p, st, best_v, best_p), (loss, v)
+
+        ts = t0 + jnp.arange(chunk, dtype=jnp.int32)
+        return chunked.scan_rounds(body, carry, ts, stop, patience=patience)
+
+    return (
+        jax.jit(step_core),
+        jax.jit(val_loss),
+        jax.jit(train_chunk,
+                static_argnames=("chunk", "eval_every", "patience"),
+                donate_argnums=(0, 1)),
+    )
 
 
 def train_supervised(
@@ -28,33 +92,74 @@ def train_supervised(
     loss_fn: Callable | None = None,
     val: tuple[np.ndarray, np.ndarray] | None = None,
     eval_every: int = 50,
+    engine: str = "scan",
+    chunk: int | None = None,
+    early_stop_patience: int = 0,
 ):
-    """SGD on the pooled window set; returns (params, history)."""
-    loss_fn = loss_fn or (lambda p, bx, by: jnp.mean(jnp.square(model.apply(p, bx) - by)))
+    """SGD on the pooled window set; returns (params, history).
+
+    With ``val`` set, the returned params are the best-val checkpoint
+    (falling back to the final params if no finite val loss was seen).
+    """
+    if engine not in ("scan", "loop"):
+        raise ValueError(f"unknown engine {engine!r}")
     x = jnp.asarray(x)
     y = jnp.asarray(y)
+    val_x = val_y = None
+    if val is not None:
+        val_x, val_y = jnp.asarray(val[0]), jnp.asarray(val[1])
+    do_eval = val is not None and bool(eval_every)
+    if early_stop_patience and not do_eval:
+        raise ValueError("early_stop_patience requires val and eval_every")
 
-    @jax.jit
-    def step(p, st, k):
-        idx = jax.random.randint(k, (batch_size,), 0, x.shape[0])
-        loss, grads = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
-        p, st = optimizer.update(grads, st, p)
-        return p, st, loss
+    step_jit, val_jit, chunk_jit = _build_engine(
+        model, optimizer, loss_fn, batch_size)
 
     key, k_init = jax.random.split(key)
     params = model.init(k_init)
     st = optimizer.init(params)
     history = []
-    best_val, best_params = np.inf, params
-    for t in range(steps):
-        key, sub = jax.random.split(key)
-        params, st, loss = step(params, st, sub)
-        rec = {"step": t, "loss": float(loss)}
-        if val is not None and (t + 1) % eval_every == 0:
-            pv = model.apply(params, jnp.asarray(val[0]))
-            vloss = float(jnp.mean(jnp.square(pv - jnp.asarray(val[1]))))
-            rec["val_loss"] = vloss
-            if vloss < best_val:
-                best_val, best_params = vloss, params
-        history.append(rec)
-    return (best_params if val is not None and np.isfinite(best_val) else params), history
+
+    if engine == "loop":
+        best_val, best_params = np.inf, params
+        for t in range(steps):
+            key, sub = jax.random.split(key)
+            params, st, loss = step_jit(params, st, sub, x, y)
+            rec = {"step": t, "loss": float(loss)}
+            if do_eval and (t + 1) % eval_every == 0:
+                vloss = float(val_jit(params, val_x, val_y))
+                rec["val_loss"] = vloss
+                if vloss < best_val:
+                    best_val, best_params = vloss, params
+            history.append(rec)
+        return (best_params if val is not None and np.isfinite(best_val) else params), history
+
+    chunk = max(1, min(chunk or DEFAULT_CHUNK, steps))
+    # best_params must be distinct buffers from params: the donated carry
+    # may not alias the same buffer twice
+    carry = (key, params, st, jnp.full((), jnp.inf, jnp.float32),
+             jax.tree.map(jnp.copy, params))
+    stop = chunked.init_stop() if early_stop_patience else None
+    t = 0
+    while t < steps:
+        c = min(chunk, steps - t)
+        carry, stop, (losses, vals) = chunked.dispatch_chunk(
+            chunk_jit, carry, stop, x, y,
+            val_x if do_eval else None, val_y if do_eval else None,
+            jnp.int32(t), chunk=c,
+            eval_every=eval_every if do_eval else 0,
+            patience=early_stop_patience,
+        )
+        sr = int(np.asarray(stop.stop_round)) if stop is not None else -1
+        stopped = chunked.drain_history(
+            history, np.asarray(losses),
+            np.asarray(vals) if do_eval else None, t,
+            eval_every=eval_every if do_eval else 0, stop_round=sr,
+            round_key="step",
+        )
+        t += c
+        if stopped:
+            break
+    _, params, _, best_v, best_params = carry
+    use_best = val is not None and bool(np.isfinite(np.asarray(best_v)))
+    return (best_params if use_best else params), history

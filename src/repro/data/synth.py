@@ -56,17 +56,42 @@ DATASET_SPECS: dict[str, DatasetSpec] = {
 _FAST_DAYS = 6
 
 
+def node_skew_offsets(num_nodes: int) -> np.ndarray:
+    """Deterministic centered per-node offsets in ``[-1, 1]``, float32.
+
+    The non-IID skew axis shifts node ``i``'s glucose distribution by
+    ``skew * offsets[i]``: node 0 sits at ``-skew``, the last node at
+    ``+skew``, the population mean shift is exactly zero.  Both the
+    sweep engine (batch-level shift inside ``_local_step``) and the
+    generator-level skew (:func:`generate_dataset`) use this table, so
+    a swept scenario's serial twin is a plain ``train()`` on
+    pre-shifted host arrays."""
+    if num_nodes <= 1:
+        return np.zeros((num_nodes,), np.float32)
+    i = np.arange(num_nodes, dtype=np.float32)
+    return (2.0 * i - (num_nodes - 1)) / np.float32(num_nodes - 1)
+
+
 def generate_patient_series(
-    spec: DatasetSpec, patient: int, *, days: int | None = None, seed: int = 0
+    spec: DatasetSpec,
+    patient: int,
+    *,
+    days: int | None = None,
+    seed: int = 0,
+    mean_shift: float = 0.0,
 ) -> np.ndarray:
-    """One patient's CGM trace in mg/dL, shape (days*288,), NaN = missing."""
+    """One patient's CGM trace in mg/dL, shape (days*288,), NaN = missing.
+
+    ``mean_shift`` moves the patient's basal level AFTER all RNG draws
+    (no stream is consumed), so ``mean_shift=0.0`` is bitwise-identical
+    to the unshifted series."""
     days = spec.num_days if days is None else days
     rng = np.random.default_rng(np.random.SeedSequence([spec.seed_base, patient, seed]))
     n = days * SAMPLES_PER_DAY
     t = np.arange(n) / SAMPLES_PER_DAY  # in days
 
     # patient-specific latent parameters
-    basal = rng.normal(spec.mean_bg, spec.mean_bg_sd)
+    basal = rng.normal(spec.mean_bg, spec.mean_bg_sd) + mean_shift
     target_sd = max(20.0, rng.normal(spec.sd_bg, spec.sd_bg_sd))
     phase = rng.uniform(0, 2 * np.pi)
     circ_amp = rng.uniform(5.0, 15.0)
@@ -137,12 +162,25 @@ def generate_patient_series(
 
 
 def generate_dataset(
-    name: str, *, fast: bool = False, max_patients: int | None = None, seed: int = 0
+    name: str,
+    *,
+    fast: bool = False,
+    max_patients: int | None = None,
+    seed: int = 0,
+    skew: float = 0.0,
 ) -> list[np.ndarray]:
-    """All patients' traces for a dataset.  ``fast`` shortens to 6 days."""
+    """All patients' traces for a dataset.  ``fast`` shortens to 6 days.
+
+    ``skew`` introduces a non-IID per-patient distribution shift:
+    patient ``p`` is generated with
+    ``mean_shift = skew * mean_bg_sd * node_skew_offsets(n)[p]``.
+    ``skew=0.0`` is bitwise-identical to the unskewed dataset (the
+    shift is applied after all RNG draws)."""
     spec = DATASET_SPECS[name]
     days = _FAST_DAYS if fast else spec.num_days
     n_pat = spec.num_patients if max_patients is None else min(max_patients, spec.num_patients)
+    shifts = float(skew) * spec.mean_bg_sd * node_skew_offsets(n_pat)
     return [
-        generate_patient_series(spec, p, days=days, seed=seed) for p in range(n_pat)
+        generate_patient_series(spec, p, days=days, seed=seed, mean_shift=float(shifts[p]))
+        for p in range(n_pat)
     ]

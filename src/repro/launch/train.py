@@ -41,7 +41,12 @@ stacked (G, N, ...) state is placed on a 2-D ("grid", "node") mesh
 (``launch.mesh.make_sweep_mesh``) where scenarios batch over "grid"
 and the gossip collectives (``--gossip-impl allgather|psum|auto``)
 stay scoped to "node" — the memory-scaled way to sweep paper-scale
-federations.  Sweeps are single-process and scan-engine only
+federations.  ``--sweep-schedules bernoulli,markov``,
+``--sweep-skews 0,0.5,1`` and ``--sweep-dp-sigmas 0,0.01,0.05`` extend
+the cross product with the Markov-sticky staleness, non-IID data-skew
+and DP-noise-level axes (each a traced ``(G,)`` array; every scenario
+keeps exact serial key-stream parity).  Sweeps are single-process and
+scan-engine only
 (``--mixer kernel``/``--use-kernel``, ``--engine loop`` and multi-host
 flags refuse); instead of a checkpoint, the launcher writes a
 per-scenario summary JSON to ``--out``.
@@ -176,6 +181,20 @@ def main():
     ap.add_argument("--sweep-seeds", type=int, default=1,
                     help="seeds per sweep scenario (0..K-1); only with "
                          "--sweep-ratios")
+    ap.add_argument("--sweep-schedules", default=None,
+                    help="comma-separated participation schedules to "
+                         "sweep, from {bernoulli, markov}: adds the "
+                         "Markov-sticky staleness axis to the grid; only "
+                         "with --sweep-ratios")
+    ap.add_argument("--sweep-skews", default=None,
+                    help="comma-separated non-IID data-skew strengths, "
+                         "e.g. '0,0.5,1': node i trains on batches "
+                         "shifted by skew*node_skew_offsets(N)[i]; only "
+                         "with --sweep-ratios")
+    ap.add_argument("--sweep-dp-sigmas", default=None,
+                    help="comma-separated local-DP gossip noise sigmas "
+                         "swept as a traced axis, e.g. '0,0.01,0.05'; "
+                         "only with --sweep-ratios")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="compute population val-RMSE every K rounds "
                          "INSIDE the scanned chunk (0 = off); no "
@@ -214,12 +233,25 @@ def main():
         args.coordinator, args.num_processes, args.process_id
     )
     sweep_ratios = None
+    sweep_axes = {}
     if args.sweep_ratios is not None:
         sweep_ratios = [float(r) for r in args.sweep_ratios.split(",") if r]
         if not sweep_ratios:
             raise SystemExit("--sweep-ratios parsed to an empty list")
         if args.sweep_seeds < 1:
             raise SystemExit("--sweep-seeds must be >= 1")
+        if args.sweep_schedules:
+            sweep_axes["schedules"] = tuple(
+                s.strip() for s in args.sweep_schedules.split(",") if s.strip()
+            )
+        if args.sweep_skews:
+            sweep_axes["skews"] = tuple(
+                float(v) for v in args.sweep_skews.split(",") if v
+            )
+        if args.sweep_dp_sigmas:
+            sweep_axes["dp_sigmas"] = tuple(
+                float(v) for v in args.sweep_dp_sigmas.split(",") if v
+            )
         if distributed:
             raise SystemExit("scenario sweeps are single-process "
                              "(drop --num-processes or --sweep-ratios)")
@@ -230,6 +262,9 @@ def main():
         if args.engine == "loop" or args.chunk == 0:
             raise SystemExit("scenario sweeps need the scan engine "
                              "(drop --engine loop / --chunk 0)")
+    elif args.sweep_schedules or args.sweep_skews or args.sweep_dp_sigmas:
+        raise SystemExit("--sweep-schedules/--sweep-skews/--sweep-dp-sigmas "
+                         "extend the scenario grid and need --sweep-ratios")
     if distributed:
         print(f"multihost: process {jax.process_index()}/{jax.process_count()} "
               f"local_devices={jax.local_device_count()} "
@@ -266,6 +301,7 @@ def main():
         sweep_grid = SweepGrid.build(
             [args.topology], sweep_ratios, range(args.sweep_seeds),
             num_nodes=fed.num_nodes, cluster_size=fl_cfg.cluster_size,
+            **sweep_axes,
         )
         if args.mixer == "sharded":
             from repro.launch.mesh import make_sweep_mesh
@@ -320,9 +356,12 @@ def main():
         from repro.utils.pytree import tree_index
 
         grid = sweep_grid
+        axes_note = "".join(
+            f" x {k} {list(v)}" for k, v in sweep_axes.items()
+        )
         print(f"sweep: {grid.size} scenarios "
-              f"({args.topology} x {sweep_ratios} x {args.sweep_seeds} seeds) "
-              f"as one batched program")
+              f"({args.topology} x {sweep_ratios}{axes_note} x "
+              f"{args.sweep_seeds} seeds) as one batched program")
         if sweep_mesh is not None:
             # the trainer holds this exact mesh — train_sweep runs on it
             print(f"sweep mesh: {dict(sweep_mesh.shape)} over "
@@ -334,7 +373,8 @@ def main():
             eval_every=args.eval_every, val_data=val_data,
         )
         summary = []
-        for g, (topo, ratio, seed) in enumerate(grid.labels):
+        for g in range(grid.size):
+            lab = grid.label_dict(g)
             hist = hists[g]
             pop_g = tree_index(pops, g)
             preds, ys = [], []
@@ -342,13 +382,18 @@ def main():
                 preds.append(pred)
                 ys.append(p.test_y_raw)
             agg = all_metrics(np.concatenate(ys), np.concatenate(preds))
-            rec = {"topology": topo, "inactive_ratio": ratio, "seed": seed,
-                   "final_loss": hist[-1]["loss"], **agg}
+            rec = {**lab, "final_loss": hist[-1]["loss"], **agg}
             evals = [h["val_rmse"] for h in hist if "val_rmse" in h]
             if evals:
                 rec["final_val_rmse"] = evals[-1]
             summary.append(rec)
-            print(f"  [{topo:8s} inactive={ratio:.0%} seed={seed}] "
+            extra = ""
+            if sweep_axes:
+                extra = (f" sched={lab['schedule']} skew={lab['skew']:g} "
+                         f"dp={lab['dp_sigma']:g}")
+            print(f"  [{lab['topology']:8s} "
+                  f"inactive={lab['inactive_ratio']:.0%} "
+                  f"seed={lab['seed']}{extra}] "
                   f"loss {rec['final_loss']:.4f}  test RMSE {agg['rmse']:6.2f}  "
                   f"MARD {agg['mard']:5.2f}%")
         out = Path(args.out)

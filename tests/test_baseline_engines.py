@@ -1,0 +1,238 @@
+"""Loop-vs-scan parity for the baseline trainers (FedAvg, MAML/MetaSGD,
+pooled supervised): the chunked scan engines must BITWISE-match the
+original per-round jit loops — losses, eval records, final params — with
+the loop kept as ``engine="loop"``; plus the early-stopping semantics
+and the Table-4 compiled-execution budget (<= 4 executions for the whole
+trainable-baseline grid, counted through the ``chunked.dispatch_chunk``
+chokepoint)."""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.chunked as chunked
+from repro.config import FLConfig
+from repro.core.fedavg import FedAvg
+from repro.core.meta import MAML, MetaSGD
+from repro.core.supervised import train_supervised
+from repro.models import LSTMModel
+from repro.optim import adam, sgd
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _toy_fed(n=5, m=40, L=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, m, L)).astype(np.float32)
+    w_true = rng.normal(size=(L,)).astype(np.float32)
+    y = (x @ w_true)[..., None].astype(np.float32)
+    counts = np.full((n,), m, np.int64)
+    return x, y, counts
+
+
+def _val_set(m=16, L=12, seed=7):
+    rng = np.random.default_rng(seed)
+    vx = rng.normal(size=(m, L)).astype(np.float32)
+    vy = rng.normal(size=(m, 1)).astype(np.float32)
+    return vx, vy
+
+
+def _model(L=12):
+    return LSTMModel(history_len=L, hidden=8).as_model()
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _hist_arrays(hist, key="round"):
+    losses = np.asarray([r["loss"] for r in hist])
+    vals = [(r[key], r["val_loss"]) for r in hist if "val_loss" in r]
+    return losses, vals
+
+
+# ----------------------------------------------------------------------
+# per-trainer bitwise parity (the pin that lets scan be the default)
+# ----------------------------------------------------------------------
+
+def test_fedavg_scan_matches_loop_bitwise():
+    """engine="scan" (chunked, one sync per chunk, incl. a remainder
+    chunk) == engine="loop" bitwise: losses, val records, params."""
+    x, y, counts = _toy_fed()
+    vx, vy = _val_set()
+    cfg = FLConfig(num_nodes=5, rounds=9, inactive_ratio=0.3)
+
+    def run(engine):
+        fa = FedAvg(_model(), sgd(1e-2), cfg)
+        return fa.train(
+            jax.random.PRNGKey(7), x, y, counts, batch_size=8,
+            engine=engine, chunk=4, val_data=(vx, vy), eval_every=3,
+        )
+
+    p_loop, h_loop = run("loop")
+    p_scan, h_scan = run("scan")
+    assert len(h_loop) == len(h_scan) == 9
+    l_loop, v_loop = _hist_arrays(h_loop)
+    l_scan, v_scan = _hist_arrays(h_scan)
+    np.testing.assert_array_equal(l_loop, l_scan)
+    assert v_loop == v_scan and len(v_loop) == 3
+    _assert_trees_equal(p_loop, p_scan)
+
+
+@pytest.mark.parametrize("cls", [MAML, MetaSGD])
+def test_meta_scan_matches_loop_bitwise(cls):
+    """MAML/MetaSGD scan engine == loop engine bitwise: losses, val
+    records, meta-params AND learned inner lrs ride the donated carry."""
+    x, y, counts = _toy_fed(n=4, m=30)
+    vx, vy = _val_set()
+
+    def run(engine):
+        meta = cls(_model(), adam(1e-3), inner_lr=1e-2, inner_steps=2)
+        return meta.train(
+            jax.random.PRNGKey(3), x, y, counts, batch_size=8, steps=7,
+            engine=engine, chunk=3, val_data=(vx, vy), eval_every=2,
+        )
+
+    p_loop, lr_loop, h_loop = run("loop")
+    p_scan, lr_scan, h_scan = run("scan")
+    l_loop, v_loop = _hist_arrays(h_loop)
+    l_scan, v_scan = _hist_arrays(h_scan)
+    np.testing.assert_array_equal(l_loop, l_scan)
+    assert v_loop == v_scan and len(v_loop) == 3
+    _assert_trees_equal(p_loop, p_scan)
+    _assert_trees_equal(lr_loop, lr_scan)
+
+
+def test_supervised_scan_matches_loop_bitwise():
+    """Pooled-supervised scan engine == loop engine bitwise, including
+    the best-val checkpoint selection (jnp.where tree-selects in the
+    carry vs the loop's host-side snapshot)."""
+    x, y, _ = _toy_fed(n=1, m=120)
+    x, y = x[0], y[0]
+    vx, vy = _val_set()
+
+    def run(engine, **kw):
+        return train_supervised(
+            _model(), sgd(1e-2), jax.random.PRNGKey(5), x, y, batch_size=8,
+            steps=23, val=(vx, vy), eval_every=5, engine=engine, **kw,
+        )
+
+    p_loop, h_loop = run("loop")
+    p_scan, h_scan = run("scan", chunk=7)
+    l_loop, v_loop = _hist_arrays(h_loop, key="step")
+    l_scan, v_scan = _hist_arrays(h_scan, key="step")
+    np.testing.assert_array_equal(l_loop, l_scan)
+    assert v_loop == v_scan and len(v_loop) == 4
+    _assert_trees_equal(p_loop, p_scan)
+
+    # no-val path: both engines return the FINAL params
+    pa, ha = train_supervised(_model(), sgd(1e-2), jax.random.PRNGKey(5),
+                              x, y, batch_size=8, steps=9, engine="scan")
+    pb, hb = train_supervised(_model(), sgd(1e-2), jax.random.PRNGKey(5),
+                              x, y, batch_size=8, steps=9, engine="loop")
+    _assert_trees_equal(pa, pb)
+    assert len(ha) == len(hb) == 9
+
+
+# ----------------------------------------------------------------------
+# engine guards + early stopping
+# ----------------------------------------------------------------------
+
+def test_engine_guards():
+    x, y, counts = _toy_fed()
+    fa = FedAvg(_model(), sgd(1e-2), FLConfig(num_nodes=5, rounds=2))
+    with pytest.raises(ValueError, match="engine"):
+        fa.train(jax.random.PRNGKey(0), x, y, counts, engine="while")
+    with pytest.raises(ValueError, match="early_stop_patience"):
+        fa.train(jax.random.PRNGKey(0), x, y, counts,
+                 early_stop_patience=2)
+    meta = MAML(_model(), adam(1e-3))
+    with pytest.raises(ValueError, match="engine"):
+        meta.train(jax.random.PRNGKey(0), x, y, counts, engine="while")
+    with pytest.raises(ValueError, match="early_stop_patience"):
+        meta.train(jax.random.PRNGKey(0), x, y, counts,
+                   early_stop_patience=1)
+    with pytest.raises(ValueError, match="engine"):
+        train_supervised(_model(), sgd(1e-2), jax.random.PRNGKey(0),
+                         x[0], y[0], engine="while")
+    with pytest.raises(ValueError, match="early_stop_patience"):
+        train_supervised(_model(), sgd(1e-2), jax.random.PRNGKey(0),
+                         x[0], y[0], early_stop_patience=1)
+
+
+def test_early_stop_truncates_and_is_chunk_invariant():
+    """The cond-guarded done-flag: the run stops after `patience`
+    non-improving evals, the history ends exactly at the tripping round,
+    and the result is IDENTICAL whether the stop lands mid-chunk or the
+    whole budget is one chunk (frozen rounds are inert)."""
+    x, y, counts = _toy_fed()
+    vx, vy = _val_set()
+    cfg = FLConfig(num_nodes=5, rounds=30, inactive_ratio=0.0)
+
+    def run(chunk):
+        fa = FedAvg(_model(), sgd(1e-2), cfg)
+        return fa.train(
+            jax.random.PRNGKey(7), x, y, counts, batch_size=8,
+            engine="scan", chunk=chunk, val_data=(vx, vy), eval_every=2,
+            early_stop_patience=1,
+        )
+
+    p_one, h_one = run(30)
+    p_mid, h_mid = run(7)
+    assert len(h_one) < 30  # it actually stopped
+    assert "val_loss" in h_one[-1]  # stopped ON an eval boundary
+    assert [r["round"] for r in h_one] == list(range(len(h_one)))
+    assert len(h_one) == len(h_mid)
+    np.testing.assert_array_equal(
+        np.asarray([r["loss"] for r in h_one]),
+        np.asarray([r["loss"] for r in h_mid]),
+    )
+    _assert_trees_equal(p_one, p_mid)
+
+    # the stopped prefix must match the no-early-stop run's prefix
+    fa = FedAvg(_model(), sgd(1e-2), cfg)
+    _, h_full = fa.train(
+        jax.random.PRNGKey(7), x, y, counts, batch_size=8, engine="scan",
+        chunk=30, val_data=(vx, vy), eval_every=2,
+    )
+    np.testing.assert_array_equal(
+        np.asarray([r["loss"] for r in h_one]),
+        np.asarray([r["loss"] for r in h_full[: len(h_one)]]),
+    )
+
+
+# ----------------------------------------------------------------------
+# Table-4 compiled-execution budget
+# ----------------------------------------------------------------------
+
+def test_table4_grid_runs_in_four_compiled_executions(monkeypatch):
+    """The whole trainable-baseline grid (fedavg, maml, metasgd, lstm)
+    dispatches <= 4 compiled chunk executions through the
+    ``chunked.dispatch_chunk`` chokepoint — one per method."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.common import Scale
+        from benchmarks.table4_baselines import run_baseline_grid
+    finally:
+        sys.path.remove(ROOT)
+
+    calls = []
+    orig = chunked.dispatch_chunk
+
+    def counting(fn, *a, **k):
+        calls.append(fn)
+        return orig(fn, *a, **k)
+
+    monkeypatch.setattr(chunked, "dispatch_chunk", counting)
+    scale = Scale(fast=True, rounds=5, sup_steps=5, max_patients=4,
+                  hidden=8, batch_size=8)
+    out = run_baseline_grid("ohiot1dm", scale)
+    assert set(out) == {"fedavg", "maml", "metasgd", "lstm"}
+    assert len(calls) <= 4, f"{len(calls)} compiled executions"
+    for method, d in out.items():
+        assert len(d["history"]) == 5, method
+        assert np.isfinite(d["history"][-1]["loss"]), method

@@ -237,6 +237,62 @@ def test_baseline_masked_row_requires_fresh_ratio(gate, tmp_path):
                 _masked_report(MASKED_BASE)) == 1
 
 
+# ------------------------------------------------- table4 baseline-grid rows
+
+
+TABLE4_BASE = dict(BASE, **{"table4-serial-loops": 30.0,
+                            "table4-batched": 60.0})
+
+
+def _table4_report(rps, ratio=None, **kw):
+    out = _report(rps, **kw)
+    if ratio is not None:
+        out["table4_batched_speedup_vs_serial"] = ratio
+    return out
+
+
+def test_table4_floor_gate(gate, tmp_path):
+    """batched/serial >= --table4-floor (default 1.5, inclusive)."""
+    base = _table4_report(TABLE4_BASE, 2.0)
+    ok = _run(gate, tmp_path, base, _table4_report(TABLE4_BASE, 1.8))
+    at = _run(gate, tmp_path, base, _table4_report(TABLE4_BASE, 1.5))
+    below = _run(gate, tmp_path, base, _table4_report(TABLE4_BASE, 1.49))
+    assert (ok, at, below) == (0, 0, 1)
+    # the floor is adjustable like the sweep/sparse floors
+    assert _run(gate, tmp_path, base, _table4_report(TABLE4_BASE, 1.2),
+                "--table4-floor", "1.1") == 0
+
+
+def test_table4_rows_excluded_from_ratio_rule(gate, tmp_path):
+    """The baseline-grid pair runs a different workload (four method
+    trainers, not the GluADFL engine federation) — its loop ratio is
+    apples-to-oranges, so tanking the raw rows must NOT trip the
+    loop-ratio gate while the same-run floor holds."""
+    fresh = dict(TABLE4_BASE, **{"table4-serial-loops": 1.0,
+                                 "table4-batched": 2.0})
+    assert _run(gate, tmp_path, _table4_report(TABLE4_BASE, 2.0),
+                _table4_report(fresh, 2.0)) == 0
+
+
+def test_missing_table4_row_fails(gate, tmp_path):
+    """Either grid row silently vanishing = the batched-baseline claim
+    stopped being measured; old baselines without them demand nothing."""
+    for gone in ("table4-batched", "table4-serial-loops"):
+        fresh = {k: v for k, v in TABLE4_BASE.items() if k != gone}
+        assert _run(gate, tmp_path, _table4_report(TABLE4_BASE, 2.0),
+                    _table4_report(fresh, 2.0)) == 1, gone
+    assert _run(gate, tmp_path, _report(BASE),
+                _table4_report(TABLE4_BASE, 2.0)) == 0
+
+
+def test_baseline_table4_row_requires_fresh_ratio(gate, tmp_path):
+    """A baseline with the table4-batched row but a fresh run reporting
+    no table4_batched_speedup_vs_serial must fail (mirrors the
+    sweep/sparse/masked rule)."""
+    assert _run(gate, tmp_path, _table4_report(TABLE4_BASE, 2.0),
+                _table4_report(TABLE4_BASE)) == 1
+
+
 # ------------------------------------------------------- serve gate rows
 
 

@@ -1,0 +1,123 @@
+"""Data-pipeline invariants feeding every trainer: windows are NaN-free
+(zero-imputation happens BEFORE windowing, targets with missing raw
+values are dropped), per-node counts equal the realizable window totals,
+the padded federation tensors are clean, and normalization round-trips
+through (fed.mean, fed.sd) at float32 resolution."""
+import numpy as np
+import pytest
+
+from repro.data import load_federated_dataset
+from repro.data.pipeline import batch_iterator, denormalize
+from repro.data.synth import generate_dataset
+from repro.data.windowing import make_windows, normalize, split_by_time, zscore_stats
+
+L, H = 12, 6
+
+
+def _fed(name="ohiot1dm", **kw):
+    return load_federated_dataset(name, fast=True, **kw)
+
+
+def test_windows_never_contain_nan():
+    """Every split's X/y for every patient — and the stacked padded
+    (N, M, L) federation tensors — must be finite: NaNs entering the
+    compiled trainers would poison whole parameter trees."""
+    fed = _fed()
+    for p in fed.patients:
+        for arr in (p.train_x, p.train_y, p.val_x, p.val_y, p.test_x,
+                    p.test_y, p.test_y_raw):
+            assert np.isfinite(arr).all()
+    assert np.isfinite(fed.x).all() and np.isfinite(fed.y).all()
+
+
+def test_counts_match_realizable_window_totals():
+    """fed.counts[i] == the node's realizable train-window count:
+    ``len(train_split) - L - H + 1`` sliding positions minus the windows
+    whose RAW target sample is missing — recomputed here from the
+    generator output, independently of make_windows."""
+    name, n_pat = "ohiot1dm", 6
+    fed = _fed(name, max_patients=n_pat)
+    raw = generate_dataset(name, fast=True, max_patients=n_pat)
+    assert fed.num_nodes == n_pat
+    for i, series in enumerate(raw):
+        tr, _, _ = split_by_time(series)
+        m = len(tr) - L - H + 1
+        tgt = np.arange(m) + L + H - 1
+        realizable = int((~np.isnan(tr[tgt])).sum())
+        assert fed.counts[i] == realizable
+        assert fed.patients[i].train_x.shape == (realizable, L)
+        assert fed.patients[i].train_y.shape == (realizable,)
+    # padding: rows past counts[i] are zero, never garbage
+    M = fed.x.shape[1]
+    assert M == fed.counts.max()
+    for i in range(fed.num_nodes):
+        k = int(fed.counts[i])
+        assert np.all(fed.x[i, k:] == 0.0) and np.all(fed.y[i, k:] == 0.0)
+        np.testing.assert_array_equal(fed.x[i, :k], fed.patients[i].train_x)
+        np.testing.assert_array_equal(fed.y[i, :k], fed.patients[i].train_y)
+
+
+def test_normalization_roundtrip_float32_resolution():
+    """Denormalizing the stored normalized targets with (fed.mean,
+    fed.sd) reproduces the raw mg/dL targets to float32 resolution
+    (|x| <= 400 -> eps ~ 3e-5); the z-scored train tensors map back into
+    the CGM range the same way."""
+    fed = _fed()
+    atol = 400 * np.finfo(np.float32).eps  # ~4.9e-5 mg/dL
+    checked = 0
+    for p in fed.patients:
+        assert p.mean == fed.mean and p.sd == fed.sd
+        if len(p.test_y) == 0:
+            continue
+        rt = denormalize(p.test_y, fed.mean, fed.sd)
+        np.testing.assert_allclose(rt, p.test_y_raw, atol=atol, rtol=0)
+        checked += len(p.test_y)
+    assert checked > 0
+    # round-trip of normalize itself on a raw series (NaNs -> 0 pinned)
+    s = np.array([40.0, 155.5, np.nan, 400.0], np.float32)
+    norm = normalize(s, fed.mean, fed.sd)
+    assert norm.dtype == np.float32
+    assert norm[2] == 0.0  # paper: missing -> zero AFTER normalization
+    rt = denormalize(norm[[0, 1, 3]], fed.mean, fed.sd)
+    np.testing.assert_allclose(rt, s[[0, 1, 3]], atol=atol, rtol=0)
+
+
+def test_make_windows_target_validity():
+    """Windows whose raw target is NaN are dropped; windows with NaN
+    HISTORY are kept as zeros (the paper's imputation policy); an
+    all-too-short series yields empty (0, L) arrays."""
+    n = 40
+    raw = np.linspace(100, 200, n).astype(np.float32)
+    raw[L + H - 1] = np.nan   # kills exactly window 0's target
+    raw[0] = np.nan           # history NaN: window 0..L-1 keep zeros
+    mean, sd = zscore_stats([raw])
+    norm = normalize(raw, mean, sd)
+    X, y, y_raw = make_windows(norm, raw, L, H)
+    m_full = n - L - H + 1
+    assert X.shape == (m_full - 1, L)
+    assert np.isfinite(X).all() and np.isfinite(y).all()
+    # the dropped window is the one targeting the NaN sample
+    tgt = np.arange(m_full) + L + H - 1
+    kept = ~np.isnan(raw[tgt])
+    np.testing.assert_array_equal(y_raw, raw[tgt][kept])
+    # short series
+    Xe, ye, ye_raw = make_windows(norm[: L + H - 1], raw[: L + H - 1], L, H)
+    assert Xe.shape == (0, L) and ye.shape == (0,) and ye_raw.shape == (0,)
+
+
+def test_zscore_stats_nan_aware_and_batch_iterator():
+    """Dataset stats ignore NaNs (a dropout-heavy patient doesn't poison
+    the z-score) and the batch iterator only ever yields full batches of
+    real rows."""
+    a = np.array([100.0, np.nan, 200.0], np.float32)
+    b = np.array([np.nan, 150.0], np.float32)
+    mean, sd = zscore_stats([a, b])
+    np.testing.assert_allclose(mean, 150.0)
+    assert sd > 1.0
+    fed = _fed(max_patients=2)
+    p = fed.patients[0]
+    it = batch_iterator(p.train_x, p.train_y, batch_size=8, seed=0)
+    for _ in range(3):
+        bx, by = next(it)
+        assert bx.shape == (8, L) and by.shape == (8,)
+        assert np.isfinite(bx).all() and np.isfinite(by).all()

@@ -91,8 +91,10 @@ def test_readme_sweep_snippet_is_consistent():
     from repro.core import GluADFL, SweepGrid
 
     sig = inspect.signature(SweepGrid.build)
-    for param in ("topologies", "inactive_ratios", "seeds", "num_nodes"):
+    for param in ("topologies", "inactive_ratios", "seeds", "num_nodes",
+                  "schedules", "skews", "dp_sigmas"):
         assert param in sig.parameters
+    assert hasattr(SweepGrid, "label_dict")
     sig = inspect.signature(GluADFL.train_sweep)
     for param in ("grid", "batch_size", "rounds", "eval_every", "val_data"):
         assert param in sig.parameters

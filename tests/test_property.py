@@ -8,6 +8,9 @@ pytest.importorskip("hypothesis", reason="optional dep: property tests need hypo
 
 from hypothesis import given, settings, strategies as st
 
+from repro.config import FLConfig
+from repro.core import GluADFL, SweepGrid
+from repro.core.async_sched import bernoulli_active, markov_active
 from repro.core.topology import (
     cluster_adjacency,
     full_adjacency,
@@ -15,6 +18,8 @@ from repro.core.topology import (
     random_adjacency,
     ring_adjacency,
 )
+from repro.models import LSTMModel
+from repro.optim import sgd
 from repro.kernels.ops import gossip_mix
 from repro.kernels.ref import gossip_mix_ref
 from repro.metrics import grmse, mae, mard, rmse
@@ -139,3 +144,141 @@ def test_gossip_equivariance_under_node_relabeling(perm_seed, n):
         gossip_mix_ref(jnp.asarray(mix[np.ix_(perm, perm)]), jnp.asarray(w[perm]))
     )
     np.testing.assert_allclose(out[perm], out_perm, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# scenario-axis invariants (the sweep's markov / skew / dp plumbing)
+# ----------------------------------------------------------------------
+
+@given(
+    n=st.integers(2, 32),
+    ratio=st.floats(0.0, 1.0),
+    p_stay_active=st.floats(0.0, 1.0),
+    p_stay_inactive=st.floats(0.0, 1.0),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_schedules_keep_one_active_at_traced_params(
+    n, ratio, p_stay_active, p_stay_inactive, seed
+):
+    """Invariant: BOTH participation schedules — bernoulli at a TRACED
+    inactive ratio (the sweep axis) and markov at traced stickiness,
+    from any previous mask — yield binary masks with >= 1 active node
+    (a silent all-inactive round would freeze the federation), and the
+    resulting mixing matrix stays row-stochastic."""
+    key = jax.random.PRNGKey(seed)
+    bern = jax.jit(lambda r: bernoulli_active(key, n, r))(jnp.float32(ratio))
+    prev = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (n,)) > 0.5)
+    prev = prev.astype(jnp.float32)
+    mark = jax.jit(
+        lambda a, b: markov_active(key, prev, a, b)
+    )(jnp.float32(p_stay_active), jnp.float32(p_stay_inactive))
+    for mask in (bern, mark):
+        m = np.asarray(mask)
+        assert set(np.unique(m)).issubset({0.0, 1.0})
+        assert m.sum() >= 1.0
+        mm = np.asarray(mixing_matrix(ring_adjacency(n), mask, 3))
+        assert (mm >= -1e-7).all()
+        np.testing.assert_allclose(mm.sum(axis=1), 1.0, atol=1e-5)
+
+
+@given(
+    n=st.integers(2, 8),
+    d=st.integers(1, 64),
+    inactive=st.floats(0.0, 0.8),
+    seed=st.integers(0, 500),
+)
+@settings(max_examples=10, deadline=None)
+def test_dp_noise_off_is_bitwise_clean_gossip(n, d, inactive, seed):
+    """Invariant: the DP gossip composition at a TRACED sigma=0 (what a
+    sigma=0 scenario of a dp-armed sweep contracts) is BITWISE the plain
+    noise-free mix — zero noise is exactly zero, never a perturbation —
+    while any positive sigma perturbs some active node."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    model = LSTMModel(history_len=4, hidden=4).as_model()
+    tr = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=n, comm_batch=3))
+    premix = {
+        "w": jax.random.normal(keys[0], (n, d)),
+        "b": jax.random.normal(keys[1], (n, 1 + d % 3)),
+    }
+    active = bernoulli_active(keys[2], n, inactive)
+    mix = mixing_matrix(ring_adjacency(n), active, 3)
+    k_dp = keys[3]
+
+    dp = jax.jit(
+        lambda sig: tr._gossip_base(premix, mix, active, k_dp, None, sig)
+    )
+    clean = tr._plain_mix(premix, mix, None, active)
+    for leaf_dp, leaf_clean in zip(
+        jax.tree.leaves(dp(jnp.float32(0.0))), jax.tree.leaves(clean)
+    ):
+        np.testing.assert_array_equal(np.asarray(leaf_dp), np.asarray(leaf_clean))
+    noisy = dp(jnp.float32(0.1))
+    diff = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(noisy), jax.tree.leaves(clean))
+    )
+    assert diff > 0.0
+
+
+@given(
+    n_topo=st.integers(1, 2),
+    n_ratio=st.integers(1, 2),
+    n_seed=st.integers(1, 2),
+    schedules=st.sampled_from(
+        [None, ("bernoulli",), ("markov",), ("bernoulli", "markov")]
+    ),
+    skews=st.one_of(
+        st.none(), st.lists(st.floats(0.0, 1.0), min_size=1, max_size=2)
+    ),
+    dp_sigmas=st.one_of(
+        st.none(), st.lists(st.floats(0.0, 0.5), min_size=1, max_size=2)
+    ),
+)
+@settings(**SETTINGS)
+def test_sweep_grid_axes_product_layout(
+    n_topo, n_ratio, n_seed, schedules, skews, dp_sigmas
+):
+    """Invariant: any combination of armed axes builds a grid of exactly
+    the cross-product size, every armed axis is a (G,) float32 array,
+    and ``label_dict(g)`` agrees with the g-th cross-product entry."""
+    topos = ("ring", "random")[:n_topo]
+    ratios = tuple(0.2 * i for i in range(n_ratio))
+    seeds = tuple(range(n_seed))
+    grid = SweepGrid.build(
+        topos, ratios, seeds, num_nodes=4, schedules=schedules,
+        skews=tuple(skews) if skews else None,
+        dp_sigmas=tuple(dp_sigmas) if dp_sigmas else None,
+    )
+    armed = any(a is not None for a in (schedules, skews, dp_sigmas))
+    g_expect = (
+        n_topo * n_ratio * n_seed
+        * len(schedules or ("bernoulli",))
+        * len(skews or [0.0])
+        * len(dp_sigmas or [0.0])
+    )
+    assert grid.size == g_expect
+    for ax, vals in (
+        (grid.markov, schedules), (grid.skew, skews), (grid.dp_sigma, dp_sigmas)
+    ):
+        if vals is None:
+            assert ax is None
+        else:
+            assert ax.shape == (grid.size,) and ax.dtype == jnp.float32
+    g = 0
+    for t in topos:
+        for r in ratios:
+            for sc in (schedules or ("bernoulli",)):
+                for sk in (skews or [0.0]):
+                    for dp_s in (dp_sigmas or [0.0]):
+                        for s in seeds:
+                            lab = grid.label_dict(g)
+                            assert lab["topology"] == t
+                            assert lab["inactive_ratio"] == pytest.approx(r)
+                            if armed:
+                                assert lab["schedule"] == sc
+                                assert lab["skew"] == pytest.approx(sk)
+                                assert lab["dp_sigma"] == pytest.approx(dp_s)
+                            assert lab["seed"] == s
+                            g += 1
+    assert g == grid.size

@@ -1,0 +1,282 @@
+"""Scenario-axis parity tests: each optional sweep axis — Markov-sticky
+staleness, non-IID data skew, DP noise level — must reproduce its SERIAL
+twin exactly (same key chain, same losses/params/eval records as a plain
+``train(PRNGKey(seed_g))`` with the matching ``FLConfig`` /
+``dp_noise_sigma``), and the whole multi-axis grid must still run in the
+chunked compiled-execution budget.  These are the fails-if-broken pins
+for the axis plumbing: reverting the schedule select, the batch shift,
+or the traced sigma breaks a bitwise (or 1e-5, for the XLA-fusion-
+sensitive skew path) comparison here."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import GluADFL, SweepGrid
+from repro.data.synth import node_skew_offsets
+from repro.models import LSTMModel
+from repro.optim import sgd
+from repro.utils.pytree import tree_index, tree_l2_norm, tree_sub
+
+
+def _toy_fed(n=6, m=40, L=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, m, L)).astype(np.float32)
+    w_true = rng.normal(size=(L,)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(size=(n, m)).astype(np.float32)
+    counts = np.full((n,), m, np.int32)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(counts)
+
+
+def _val_set(m=24, L=12, seed=7):
+    rng = np.random.default_rng(seed)
+    vx = rng.normal(size=(m, L)).astype(np.float32)
+    vy = (vx @ rng.normal(size=(L,)).astype(np.float32)).astype(np.float32)
+    return jnp.asarray(vx), jnp.asarray(vy)
+
+
+def _losses(hist):
+    return np.asarray([h["loss"] for h in hist])
+
+
+def _serial_twin(model, lab, x, y, counts, *, rounds, chunk=None,
+                 eval_every=0, val=None):
+    """The serial run a swept scenario must reproduce: plain ``train``
+    under the scenario's config (schedule / data_skew / dp sigma)."""
+    cfg = FLConfig(
+        topology=lab["topology"], num_nodes=int(x.shape[0]), comm_batch=3,
+        rounds=rounds, inactive_ratio=lab["inactive_ratio"],
+        schedule=lab["schedule"], data_skew=lab["skew"],
+    )
+    tr = GluADFL(model, sgd(1e-2), cfg, dp_noise_sigma=lab["dp_sigma"])
+    return tr.train(
+        jax.random.PRNGKey(lab["seed"]), x, y, counts, batch_size=8,
+        chunk=chunk, eval_every=eval_every, val_data=val,
+    )
+
+
+# ----------------------------------------------------------------------
+# grid layout
+# ----------------------------------------------------------------------
+
+def test_sweep_grid_axes_layout():
+    """Armed grids carry 6-tuple labels in (topo, ratio, schedule, skew,
+    dp, seed) document order with the new axes as (G,) arrays; unarmed
+    grids keep the classic 3-tuple labels and ``None`` axes (identical
+    compiled program); ``label_dict`` normalizes both."""
+    grid = SweepGrid.build(
+        ("ring",), (0.0, 0.4), (0,), num_nodes=6,
+        schedules=("bernoulli", "markov"), skews=(0.0, 0.5),
+        dp_sigmas=(0.0, 0.1),
+    )
+    assert grid.size == 2 * 2 * 2 * 2
+    assert grid.labels[0] == ("ring", 0.0, "bernoulli", 0.0, 0.0, 0)
+    # dp is the innermost axis before seed
+    assert grid.labels[1] == ("ring", 0.0, "bernoulli", 0.0, 0.1, 0)
+    assert grid.labels[2] == ("ring", 0.0, "bernoulli", 0.5, 0.0, 0)
+    assert grid.labels[8] == ("ring", 0.4, "bernoulli", 0.0, 0.0, 0)
+    assert grid.markov.shape == (16,) and grid.skew.shape == (16,)
+    assert grid.dp_sigma.shape == (16,)
+    # markov flag is 0/1 float, schedule-major inside each ratio block
+    np.testing.assert_array_equal(
+        np.asarray(grid.markov[:8]), [0, 0, 0, 0, 1, 1, 1, 1]
+    )
+    lab = grid.label_dict(5)
+    assert lab == {
+        "topology": "ring", "inactive_ratio": 0.0, "schedule": "markov",
+        "skew": 0.0, "dp_sigma": 0.1, "seed": 0,
+    }
+
+    plain = SweepGrid.build(("ring",), (0.0,), (0, 1), num_nodes=6)
+    assert plain.labels[0] == ("ring", 0.0, 0)
+    assert plain.markov is None and plain.skew is None
+    assert plain.dp_sigma is None
+    assert plain.label_dict(1) == {
+        "topology": "ring", "inactive_ratio": 0.0, "schedule": "bernoulli",
+        "skew": 0.0, "dp_sigma": 0.0, "seed": 1,
+    }
+
+    with pytest.raises(ValueError, match="schedule"):
+        SweepGrid.build(("ring",), (0.0,), (0,), num_nodes=6,
+                        schedules=("poisson",))
+
+
+# ----------------------------------------------------------------------
+# per-axis serial parity
+# ----------------------------------------------------------------------
+
+def test_markov_axis_matches_serial():
+    """Swept markov/bernoulli scenarios == serial ``FLConfig(schedule=
+    ...)`` runs — key chain bitwise (the schedule select reads the same
+    uniform draw), losses/params/eval records within the repo's 1e-5
+    fusion tolerance — and the two schedules genuinely diverge."""
+    rounds, chunk, eval_every = 6, 4, 2
+    x, y, counts = _toy_fed()
+    model = LSTMModel(hidden=8).as_model()
+    val = _val_set()
+    grid = SweepGrid.build(
+        ("ring",), (0.3,), (0,), num_nodes=6,
+        schedules=("bernoulli", "markov"),
+    )
+    tr = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6, comm_batch=3,
+                                            rounds=rounds))
+    pops, hists, states = tr.train_sweep(
+        x, y, counts, grid=grid, batch_size=8, chunk=chunk,
+        eval_every=eval_every, val_data=val,
+    )
+    for g in range(grid.size):
+        lab = grid.label_dict(g)
+        s_pop, s_hist, s_state = _serial_twin(
+            model, lab, x, y, counts, rounds=rounds, chunk=chunk,
+            eval_every=eval_every, val=val,
+        )
+        assert np.abs(_losses(hists[g]) - _losses(s_hist)).max() < 1e-5
+        for hs, hl in zip(hists[g], s_hist):
+            assert ("val_rmse" in hs) == ("val_rmse" in hl)
+            if "val_rmse" in hs:
+                assert abs(hs["val_rmse"] - hl["val_rmse"]) < 1e-5
+        assert float(
+            tree_l2_norm(tree_sub(tree_index(pops, g), s_pop))
+        ) < 1e-5
+        np.testing.assert_array_equal(
+            np.asarray(states.key[g]), np.asarray(s_state.key)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(states.staleness[g]), np.asarray(s_state.staleness)
+        )
+    # the axis must DO something: sticky staleness is a different process
+    assert np.abs(_losses(hists[0]) - _losses(hists[1])).max() > 1e-7
+
+
+def test_skew_axis_matches_serial():
+    """Swept non-IID skew == both of its twins: ``FLConfig(data_skew=s)``
+    AND a plain train on host-pre-shifted arrays (the gather-commute
+    contract).  The key chain stays bitwise; losses/params carry the
+    repo's 1e-5 XLA-fusion tolerance."""
+    rounds = 5
+    x, y, counts = _toy_fed()
+    model = LSTMModel(hidden=8).as_model()
+    skews = (0.0, 0.7)
+    grid = SweepGrid.build(("cluster",), (0.0,), (0,), num_nodes=6,
+                           skews=skews)
+    tr = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6, comm_batch=3,
+                                            rounds=rounds))
+    pops, hists, states = tr.train_sweep(x, y, counts, grid=grid,
+                                         batch_size=8)
+    offsets = node_skew_offsets(6)
+    for g, skew in enumerate(skews):
+        lab = grid.label_dict(g)
+        assert lab["skew"] == skew
+        s_pop, s_hist, s_state = _serial_twin(
+            model, lab, x, y, counts, rounds=rounds,
+        )
+        assert np.abs(_losses(hists[g]) - _losses(s_hist)).max() < 1e-5
+        assert float(
+            tree_l2_norm(tree_sub(tree_index(pops, g), s_pop))
+        ) < 1e-5
+        np.testing.assert_array_equal(
+            np.asarray(states.key[g]), np.asarray(s_state.key)
+        )
+        # gather-commute oracle: train on pre-shifted host arrays
+        shift = np.float32(skew) * offsets
+        cfg = FLConfig(topology="cluster", num_nodes=6, comm_batch=3,
+                       rounds=rounds)
+        o_pop, o_hist, _ = GluADFL(model, sgd(1e-2), cfg).train(
+            jax.random.PRNGKey(0), x + shift[:, None, None],
+            y + shift[:, None], counts, batch_size=8,
+        )
+        assert np.abs(_losses(hists[g]) - _losses(o_hist)).max() < 1e-5
+        assert float(
+            tree_l2_norm(tree_sub(tree_index(pops, g), o_pop))
+        ) < 1e-5
+    # reverting the shift would collapse the two scenarios onto each other
+    assert np.abs(_losses(hists[0]) - _losses(hists[1])).max() > 1e-7
+
+
+def test_dp_axis_matches_serial():
+    """Swept DP sigmas == serial ``GluADFL(dp_noise_sigma=sigma_g)`` runs
+    bitwise (python-float sigma and traced-f32 sigma scale the same
+    normal draw), and different sigmas produce different trajectories."""
+    rounds, chunk = 6, 4
+    x, y, counts = _toy_fed()
+    model = LSTMModel(hidden=8).as_model()
+    sigmas = (0.05, 0.2)
+    grid = SweepGrid.build(("ring",), (0.2,), (0,), num_nodes=6,
+                           dp_sigmas=sigmas)
+    tr = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6, comm_batch=3,
+                                            rounds=rounds))
+    pops, hists, states = tr.train_sweep(x, y, counts, grid=grid,
+                                         batch_size=8, chunk=chunk)
+    for g, sigma in enumerate(sigmas):
+        lab = grid.label_dict(g)
+        assert lab["dp_sigma"] == sigma
+        s_pop, s_hist, s_state = _serial_twin(
+            model, lab, x, y, counts, rounds=rounds, chunk=chunk,
+        )
+        assert np.abs(_losses(hists[g]) - _losses(s_hist)).max() < 1e-5
+        assert float(
+            tree_l2_norm(tree_sub(tree_index(pops, g), s_pop))
+        ) < 1e-5
+        np.testing.assert_array_equal(
+            np.asarray(states.key[g]), np.asarray(s_state.key)
+        )
+    assert np.abs(_losses(hists[0]) - _losses(hists[1])).max() > 1e-7
+
+
+def test_all_axes_combined_matches_serial_and_budget():
+    """All three axes armed at once: the grid still runs in the chunked
+    compiled-execution budget (one batched program per chunk shape), and
+    a scenario engaging EVERY axis simultaneously (markov + skew + dp)
+    still reproduces its serial twin."""
+    rounds, chunk = 5, 4
+    x, y, counts = _toy_fed()
+    model = LSTMModel(hidden=8).as_model()
+    grid = SweepGrid.build(
+        ("ring",), (0.3,), (0,), num_nodes=6,
+        schedules=("bernoulli", "markov"), skews=(0.0, 0.6),
+        dp_sigmas=(0.05,),
+    )
+    assert grid.size == 4
+    tr = GluADFL(model, sgd(1e-2), FLConfig(num_nodes=6, comm_batch=3,
+                                            rounds=rounds))
+    calls = []
+    inner = tr._sweep_chunk_jit
+
+    def counting(*a, **k):
+        calls.append(k.get("chunk"))
+        return inner(*a, **k)
+
+    tr._sweep_chunk_jit = counting
+    pops, hists, states = tr.train_sweep(x, y, counts, grid=grid,
+                                         batch_size=8, chunk=chunk)
+    assert len(calls) <= 2, calls  # 4 + 1 -> two chunk shapes
+    # the fully-engaged scenario: markov schedule, skew 0.6, sigma 0.05
+    g = next(
+        i for i in range(grid.size)
+        if grid.label_dict(i)["schedule"] == "markov"
+        and grid.label_dict(i)["skew"] == 0.6
+    )
+    s_pop, s_hist, s_state = _serial_twin(
+        model, grid.label_dict(g), x, y, counts, rounds=rounds, chunk=chunk,
+    )
+    assert np.abs(_losses(hists[g]) - _losses(s_hist)).max() < 1e-5
+    assert float(
+        tree_l2_norm(tree_sub(tree_index(pops, g), s_pop))
+    ) < 1e-5
+    np.testing.assert_array_equal(
+        np.asarray(states.key[g]), np.asarray(s_state.key)
+    )
+
+
+def test_sweep_axes_need_ratio_grid_guards():
+    """Axis tuples must be well-formed: an empty-axis build keeps the
+    classic grid, a dp-armed grid keeps one key stream so sigma=0.0
+    scenarios match sigma->0 limits (pinned in test_property), and the
+    builder rejects unknown schedules (covered above) without mutating
+    the classic label layout."""
+    grid = SweepGrid.build(("ring", "random"), (0.0, 0.5), (0, 1),
+                           num_nodes=6, schedules=None, skews=None,
+                           dp_sigmas=None)
+    assert grid.size == 8 and grid.labels[0] == ("ring", 0.0, 0)
+    assert grid.markov is None and grid.skew is None and grid.dp_sigma is None
