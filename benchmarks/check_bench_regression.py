@@ -27,10 +27,14 @@ engine's speedup over the loop engine measured in the SAME process:
     0.9): the O(N·B) neighbor table must not lose to the (N, N) matrix
     at paper scale (nominal claim >= 1.0; the floor concedes 10% to
     shared-runner jitter).  The representation rows and the sparse-only
-    ``sparse-gossip-10k`` scaling row are wall-clock/alternate-config
-    rows — excluded from the loop-ratio rule, presence-checked instead
-    (a vanished row is how the 10k-scale path would quietly stop being
-    measured);
+    ``sparse-gossip-10k`` / ``sparse-gossip-100k`` scaling rows (the
+    latter is the sharded gather-table schedule,
+    ``gossip_impl="gather"``) are wall-clock/alternate-config rows —
+    excluded from the loop-ratio rule, presence-checked instead (a
+    vanished row is how a scale path would quietly stop being
+    measured).  The 100k row additionally pins the presence of the
+    ``gather_table_memory_bytes`` record — the analytic per-device
+    mixing memory of allgather vs the gather tables;
   * ``masked_gossip_overhead_vs_allgather`` (sharded-scan /
     masked-sharded-scan, same process, only ``gossip_impl`` differs)
     must stay <= ``--masked-ceiling`` (default 4.0): pairwise-masked
@@ -136,9 +140,11 @@ WALL_CLOCK_ROWS = ("serial-sweep", "sweep-scan", "sweep-sharded-psum")
 
 # rows gated by a same-run floor / presence instead of the loop ratio:
 # the representation pair runs a different model width than the engine
-# rows (their loop ratio would compare apples to oranges) and the 10k
-# row is compile-included wall clock by design
-SPARSE_ROWS = ("dense-gossip-n226", "sparse-gossip-n226", "sparse-gossip-10k")
+# rows (their loop ratio would compare apples to oranges) and the 10k /
+# 100k rows are compile-included wall clock by design (the 100k row is
+# the sharded gather-table schedule, gossip_impl="gather")
+SPARSE_ROWS = ("dense-gossip-n226", "sparse-gossip-n226", "sparse-gossip-10k",
+               "sparse-gossip-100k")
 
 # the secure-aggregation row: its whole point is its same-run overhead
 # ratio against sharded-scan (gated by --masked-ceiling), so the loop
@@ -349,6 +355,24 @@ def main(argv=None) -> int:
     elif "table4-batched" in base.get("rounds_per_sec", {}):
         failures.append("baseline has a table4-batched row but the fresh "
                         "run reports no table4_batched_speedup_vs_serial")
+
+    # the 100k gather-table row ships its analytic per-device memory
+    # record; a baseline that has the row but a fresh run without the
+    # record means the memory claim quietly stopped being written
+    if "sparse-gossip-100k" in base.get("rounds_per_sec", {}):
+        mem = fresh.get("gather_table_memory_bytes")
+        present = (
+            isinstance(mem, dict)
+            and "allgather_gathered_bytes_per_device" in mem
+            and "gather_table_bytes_per_device" in mem
+        )
+        print(f"{'gather-table memory':>20s}: per-device record "
+              f"{'present' if present else 'MISSING'} "
+              f"{'ok' if present else 'FAIL'}")
+        if not present:
+            failures.append(
+                "baseline has a sparse-gossip-100k row but the fresh run "
+                "reports no gather_table_memory_bytes record")
 
     masked = fresh.get("masked_gossip_overhead_vs_allgather")
     if masked is not None:

@@ -70,6 +70,19 @@ path under its execution strategies.
                     entries.  Sparse-only END-TO-END wall clock (compile
                     included — population scale runs once, like the
                     sweep rows); the gate checks presence, not a ratio;
+  * sparse-gossip-100k — the row even the sparse ALLGATHER schedule
+                    cannot run forever: a 100 000-node ring federation
+                    under ``gossip_impl="gather"`` (backend
+                    ``sharded_gather_tables``), where the neighbor
+                    tables AND node rows stay sharded over the node
+                    mesh axis and the local row block ring-rotates via
+                    ``ppermute`` — no device ever materializes the
+                    gathered (N, D) federation.  END-TO-END wall clock
+                    like the 10k row, presence-gated; the JSON also
+                    records the analytic per-device mixing memory of
+                    the allgather schedule vs the gather tables
+                    (``gather_table_memory_bytes``), which is the
+                    number this schedule exists to shrink;
   * table4-serial-loops / table4-batched — the Table-4 trainable-
                     baseline grid (FedAvg, MAML, MetaSGD, supervised
                     LSTM — the same four configs
@@ -324,6 +337,44 @@ def bench_sparse_gossip(args) -> dict:
         t0 = time.perf_counter()
         run_big()
         out["sparse-gossip-10k"] = 2 / (time.perf_counter() - t0)
+
+    nh = args.sparse_huge_nodes
+    if nh:
+        from repro.core.distributed import _default_federation_mesh
+
+        cfg_huge = FLConfig(topology="ring", num_nodes=nh, rounds=2,
+                            comm_batch=7, inactive_ratio=0.2)
+        xh, yh, ch = synth_federation(nh, 2, 12, seed=4)
+        model = LSTMModel(hidden=4).as_model()
+
+        def run_huge():
+            tr = GluADFL(model, sgd(1e-2), cfg_huge, mixer="sharded",
+                         gossip_impl="gather", gossip_repr="sparse")
+            tr.train(jax.random.PRNGKey(0), xh, yh, ch, batch_size=2,
+                     rounds=2, chunk=2)
+
+        t0 = time.perf_counter()
+        run_huge()
+        out["sparse-gossip-100k"] = 2 / (time.perf_counter() - t0)
+
+        # the number the gather-table schedule exists to shrink: analytic
+        # per-device bytes the MIXING step must hold resident.  allgather
+        # materializes the full (N, D) federation on every device; the
+        # gather tables keep the local (N/shards, D) block plus one
+        # ring-rotating block of the same size in flight
+        p0 = model.init(jax.random.PRNGKey(0))
+        node_bytes = sum(
+            l.size * l.dtype.itemsize for l in jax.tree.leaves(p0)
+        )
+        shards = _default_federation_mesh(nh).shape["node"]
+        out["gather-table-memory"] = {
+            "num_nodes": nh,
+            "node_shards": shards,
+            "param_bytes_per_node": node_bytes,
+            "allgather_gathered_bytes_per_device": nh * node_bytes,
+            "gather_table_bytes_per_device":
+                2 * (nh // shards) * node_bytes,
+        }
     return out
 
 
@@ -532,6 +583,9 @@ def main(argv=None):
     ap.add_argument("--sparse-big-nodes", type=int, default=10000,
                     help="node count for the sparse-only scaling row "
                          "(0 skips it)")
+    ap.add_argument("--sparse-huge-nodes", type=int, default=100000,
+                    help="node count for the sharded gather-table row "
+                         "(gossip_impl='gather'; 0 skips it)")
     ap.add_argument("--table4-rounds", type=int, default=128,
                     help="rounds/steps per method for the Table-4 "
                          "baseline-grid pair (0 skips both rows)")
@@ -611,7 +665,9 @@ def main(argv=None):
         batch_size=args.batch, chunk=args.chunk,
     )
 
-    results.update(bench_sparse_gossip(args))
+    sparse_rows = bench_sparse_gossip(args)
+    gather_memory = sparse_rows.pop("gather-table-memory", None)
+    results.update(sparse_rows)
 
     if args.table4_rounds:
         results.update(bench_table4(args))
@@ -639,6 +695,10 @@ def main(argv=None):
     if "scan-eval" in results:
         # streaming-eval overhead: 1.0 = free, acceptance target >= 0.9
         out["scan_eval_relative_throughput"] = results["scan-eval"] / results["scan"]
+    if gather_memory is not None:
+        # per-device mixing memory, analytic: what the gather-table
+        # schedule buys over allgather at the 100k row's scale
+        out["gather_table_memory_bytes"] = gather_memory
     if "table4-batched" in results:
         # the compiled baseline grid vs the per-round loops it demoted,
         # warm steady state: acceptance target >= the gate's
@@ -660,6 +720,12 @@ def main(argv=None):
           f"{out['sparse_gossip_speedup_vs_dense']:.2f}x (target >= 1)")
     print(f"masked gossip overhead vs allgather: "
           f"{out['masked_gossip_overhead_vs_allgather']:.2f}x (ceiling <= 4)")
+    if gather_memory is not None:
+        m = gather_memory
+        print(f"gather-table per-device mixing memory @ N={m['num_nodes']}: "
+              f"{m['gather_table_bytes_per_device'] / 2**20:.1f} MiB vs "
+              f"allgather {m['allgather_gathered_bytes_per_device'] / 2**20:.1f} "
+              f"MiB ({m['node_shards']} shards)")
     if "table4_batched_speedup_vs_serial" in out:
         print(f"table4 batched grid vs serial loops: "
               f"{out['table4_batched_speedup_vs_serial']:.2f}x (floor 1.5)")

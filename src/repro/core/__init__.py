@@ -25,6 +25,17 @@ from repro.core.gossip import (
     gossip_mix_kernel,
     gossip_mix_dp_kernel,
     sharded_gossip_mix,
+    sharded_gossip_mix_gather,
+)
+from repro.core.gossip_plan import (
+    GossipPlan,
+    GossipPlanError,
+    MixBackend,
+    choose_gossip_impl,
+    choose_gossip_repr,
+    mix_backends,
+    register_mix_backend,
+    resolve_gossip_plan,
 )
 from repro.core.gluadfl import GluADFL, FLState, SweepGrid
 from repro.core.fedavg import FedAvg

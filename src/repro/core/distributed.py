@@ -74,8 +74,10 @@ PyTree = Any
 # "masked" is pairwise-masked secure aggregation (core.secure_agg): on
 # the wire it rides the allgather schedule — the mask cancellation term
 # is added OUTSIDE the collective by the trainer, so every shard body
-# below stays schedule-only
-GOSSIP_IMPLS = ("allgather", "psum", "masked")
+# below stays schedule-only.  "gather" is the sparse-only gather-table
+# schedule (:func:`sharded_gossip_mix_gather`): a ppermute halo rotation
+# that never materializes the gathered (N, D) federation
+GOSSIP_IMPLS = ("allgather", "psum", "masked", "gather")
 
 # mixing-operator representations: dense (N, N) matrix vs (N, B+1)
 # neighbor table (core.topology.neighbor_table)
@@ -167,6 +169,64 @@ def sparse_gossip_shard(w, idx, wgt, *, axis: str):
         w_all.astype(jnp.float32)[..., None, :, :], idx[..., None], axis=-2
     )
     return jnp.einsum("...kb,...kbd->...kd", wgt, rows).astype(w.dtype)
+
+
+# wire-schedule registry for the dense sharded mix: impl knob value ->
+# (shard body, which mixing-matrix block each shard holds).  "masked"
+# deliberately aliases the allgather row entry — secure aggregation is a
+# trainer-level wrapper (core.secure_agg adds the exact-zero mask
+# cancellation after the mix) and its wire schedule IS the gathered-rows
+# one, so both knob values lower to the identical program.  New dense
+# schedules register here; sparse-only ones (gather tables) have their
+# own entry points.
+_DENSE_WIRE_SCHEDULES = {
+    "allgather": (general_gossip_shard, "rows"),
+    "masked": (general_gossip_shard, "rows"),
+    "psum": (psum_gossip_shard, "cols"),
+}
+
+
+def gather_tables_gossip_shard(w, idx, wgt, *, axis: str, n_shards: int):
+    """shard_map body: gather-table (sparse, fully sharded) mix.
+
+    ``idx``/``wgt`` are this shard's (..., k, B+1) neighbor-table rows
+    (``k = N / n_shards`` CONSECUTIVE global rows, matching the mesh's
+    row-block placement) and ``w`` its local (..., k, D) parameter rows.
+    Instead of all-gathering the node axis (the ``sparse_gossip_shard``
+    wire, per-device O(N · D) memory), the LOCAL block ring-rotates
+    through every shard via ``n_shards - 1`` collective-permutes: at step
+    ``t`` this shard holds the rows of global shard ``(me + t) %
+    n_shards`` and contracts exactly the table entries that reference
+    that block — each (row, slot) pair lands in precisely one step, so
+    the fp32 step-sums add up to the full B+1 contraction.  Per-device
+    working set is two row blocks (resident + in-flight), O(N/shards ·
+    D), with no gathered (N, D) spike anywhere — the schedule that takes
+    the federation past the 10k-node wall.
+
+    ``n_shards`` is static (ppermute needs Python-int source/target
+    pairs); leading dims (the sweep mesh's local grid block) batch
+    through — every index below is dim-relative.  One shard degenerates
+    to the purely local contraction with zero collectives.
+    """
+    k = w.shape[-2]
+    me = jax.lax.axis_index(axis)
+    perm = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+    block = w.astype(jnp.float32)
+    wgt32 = wgt.astype(jnp.float32)
+    acc = jnp.zeros(idx.shape[:-1] + (w.shape[-1],), jnp.float32)
+    for t in range(n_shards):
+        src = (me + t) % n_shards          # whose global rows `block` holds now
+        local = idx - src * k              # (..., k, B+1) block-relative
+        in_block = (local >= 0) & (local < k)
+        safe = jnp.where(in_block, local, 0)
+        # (..., 1, k, D) block rows indexed by (..., k, B+1, 1) -> (..., k, B+1, D)
+        rows = jnp.take_along_axis(block[..., None, :, :], safe[..., None], axis=-2)
+        acc = acc + jnp.einsum(
+            "...kb,...kbd->...kd", jnp.where(in_block, wgt32, 0.0), rows
+        )
+        if t + 1 < n_shards:
+            block = jax.lax.ppermute(block, axis, perm)
+    return acc.astype(w.dtype)
 
 
 def process_row_slice(sharding: NamedSharding, global_shape: tuple) -> slice:
@@ -263,13 +323,13 @@ def sharded_gossip_mix(
     whole FL round — including this collective — compiles into one
     program (the trainer's ``mixer="sharded"`` path).
     """
-    if impl not in GOSSIP_IMPLS:
-        raise ValueError(f"impl {impl!r} not in {GOSSIP_IMPLS}")
-    if impl == "masked":
-        # secure aggregation is a trainer-level wrapper (core.secure_agg
-        # adds the exact-zero mask cancellation after this mix); the
-        # collective schedule underneath is the gathered-rows one
-        impl = "allgather"
+    if impl not in _DENSE_WIRE_SCHEDULES:
+        raise ValueError(
+            f"impl {impl!r} not in {tuple(_DENSE_WIRE_SCHEDULES)} "
+            f"(dense wire schedules; 'gather' is sparse-only — "
+            f"sharded_gossip_mix_gather)"
+        )
+    shard_body, mix_block = _DENSE_WIRE_SCHEDULES[impl]
     if mesh is None:
         mesh = _default_federation_mesh(mix.shape[0])
     axes = node_axes or tuple(
@@ -296,20 +356,17 @@ def sharded_gossip_mix(
                 f"stacked leading dim {flat.shape[0]} != mixing-matrix "
                 f"leading dim {mix.shape[0]} (leaf {l.shape}, mix {mix.shape})"
             )
-        if impl == "psum":
-            out = _shard_map(
-                partial(psum_gossip_shard, axis=axis),
-                mesh=mesh,
-                in_specs=(P(*g, axes), P(*g, None, axes)),  # rows | COLUMN block
-                out_specs=P(*g, axes),
-            )(flat, mix)
-        else:
-            out = _shard_map(
-                partial(general_gossip_shard, axis=axis),
-                mesh=mesh,
-                in_specs=(P(*g, axes), P(*g, axes, None)),  # rows | ROW block
-                out_specs=P(*g, axes),
-            )(flat, mix)
+        # the schedule's declared matrix blocking picks the mix in_spec:
+        # "rows" shards the leading matrix dim (each shard holds its
+        # output rows), "cols" the trailing one (each shard holds the
+        # column block its local params multiply)
+        mix_spec = P(*g, None, axes) if mix_block == "cols" else P(*g, axes, None)
+        out = _shard_map(
+            partial(shard_body, axis=axis),
+            mesh=mesh,
+            in_specs=(P(*g, axes), mix_spec),
+            out_specs=P(*g, axes),
+        )(flat, mix)
         if active is not None:
             # jnp.where, not arithmetic blending: inactive rows stay
             # bit-exact even if the gathered params carry NaN/Inf
@@ -388,6 +445,87 @@ def sharded_gossip_mix_sparse(
             check_vma=False,
         )(flat, idx.astype(jnp.int32), wgt.astype(jnp.float32))
         if active is not None:
+            a = (active > 0).reshape(active.shape + (1,) * (flat.ndim - active.ndim))
+            out = jnp.where(a, out, flat.astype(out.dtype))
+        return out.reshape(l.shape).astype(l.dtype)
+
+    return jax.tree.map(leaf, stacked_params)
+
+
+def sharded_gossip_mix_gather(
+    stacked_params: PyTree,
+    idx: jnp.ndarray,
+    wgt: jnp.ndarray,
+    active: jnp.ndarray | None = None,
+    *,
+    mesh: Mesh | None = None,
+    node_axes: tuple[str, ...] | None = None,
+    grid_axis: str | None = None,
+) -> PyTree:
+    """Fully sharded gossip from a neighbor table — ``gossip_impl=
+    "gather"`` (backend ``sharded_gather_tables``).  Same call contract
+    as :func:`sharded_gossip_mix_sparse`, different wire: the (N, B+1)
+    tables AND the node rows stay sharded over the node mesh axes and
+    the local row block ring-rotates via ``ppermute``
+    (:func:`gather_tables_gossip_shard`), so only referenced remote rows
+    are ever read and NO device materializes the gathered (N, D)
+    federation — per-device memory O(N/shards · D) flat in N/shards,
+    the population-scale (100k-node) schedule.
+
+    Requires the node count to divide evenly over the node-axis width
+    (the same divisibility ``launch.mesh.make_federation_mesh``
+    guarantees).  Grid batching works as in the sparse sibling:
+    grid-stacked ``(G, N, B+1)`` tables + a ``("grid", "node")`` mesh
+    are auto-detected or forced via ``grid_axis=``.
+    """
+    if mesh is None:
+        mesh = _default_federation_mesh(idx.shape[-2])
+    axes = node_axes or tuple(
+        a for a in mesh.axis_names if a not in ("model", "grid")
+    )
+    axis = axes if len(axes) > 1 else axes[0]
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    if grid_axis is None and idx.ndim == 3 and "grid" in mesh.axis_names:
+        grid_axis = "grid"
+    g = (grid_axis,) if grid_axis else ()
+    lead = 1 + len(g)  # stacked leading dims: [grid,] node
+    if idx.ndim != 1 + lead:
+        raise ValueError(
+            f"neighbor table must be {1 + lead}-D "
+            f"({'(G, N, B+1)' if g else '(N, B+1)'}) for grid_axis={grid_axis!r}, "
+            f"got shape {idx.shape}"
+        )
+    if idx.shape != wgt.shape:
+        raise ValueError(f"idx {idx.shape} != wgt {wgt.shape}")
+    n = idx.shape[-2]
+    if n % n_shards:
+        raise ValueError(
+            f"gather-table gossip needs num_nodes divisible by the node-"
+            f"axis width, got N={n} over {n_shards} shards"
+        )
+
+    def leaf(l):
+        flat = l.reshape(l.shape[:lead] + (-1,))
+        if flat.shape[0] != idx.shape[0]:
+            raise ValueError(
+                f"stacked leading dim {flat.shape[0]} != neighbor-table "
+                f"leading dim {idx.shape[0]} (leaf {l.shape}, idx {idx.shape})"
+            )
+        # check_vma=False for the same reason as the sparse sibling: the
+        # in-block index clamp compares grid-varying indices against
+        # replicated bounds under the swept engine's spmd vmap
+        out = _shard_map(
+            partial(gather_tables_gossip_shard, axis=axis, n_shards=n_shards),
+            mesh=mesh,
+            in_specs=(P(*g, axes), P(*g, axes, None), P(*g, axes, None)),
+            out_specs=P(*g, axes),
+            check_vma=False,
+        )(flat, idx.astype(jnp.int32), wgt.astype(jnp.float32))
+        if active is not None:
+            # jnp.where keeps inactive rows bit-exact, matching every
+            # other sparse mix path
             a = (active > 0).reshape(active.shape + (1,) * (flat.ndim - active.ndim))
             out = jnp.where(a, out, flat.astype(out.dtype))
         return out.reshape(l.shape).astype(l.dtype)

@@ -134,22 +134,9 @@ import numpy as np
 
 from repro.config import FLConfig
 from repro.core.async_sched import bernoulli_active, markov_active, staleness_update
-from repro.core.gossip import (
-    gossip_mix_dp_kernel,
-    gossip_mix_kernel,
-    gossip_mix_masked,
-    gossip_mix_sparse_dp_kernel,
-    gossip_mix_sparse_kernel,
-    gossip_mix_sparse_tree,
-    gossip_mix_tree,
-    sharded_gossip_mix,
-    sharded_gossip_mix_sparse,
-)
+from repro.core.gossip_plan import MIXERS, resolve_gossip_plan
 from repro.core.secure_agg import MASK_STREAM_TAG
 from repro.core.topology import (
-    mixing_matrix,
-    neighbor_candidates,
-    neighbor_table,
     neighbor_table_from_candidates,
     random_adjacency,
     round_adjacency,
@@ -159,11 +146,8 @@ from repro.data.synth import node_skew_offsets
 from repro.models.base import Model
 from repro.optim import Optimizer
 from repro.utils.pytree import tree_mean
-from repro.utils.rng import split_like
 
 PyTree = Any
-
-MIXERS = ("tree", "kernel", "sharded")
 
 # default scan-chunk length: long enough to amortize dispatch + the
 # once-per-chunk loss sync, short enough that the first-compile cost and
@@ -365,46 +349,33 @@ class GluADFL:
         mesh=None,
     ):
         assert grad_at in ("premix", "mixed")
-        if mixer is None:
-            mixer = "kernel" if use_kernel else "tree"
-        elif use_kernel and mixer != "kernel":
-            raise ValueError(
-                f"use_kernel=True contradicts mixer={mixer!r}; pass one or the other"
-            )
-        assert mixer in MIXERS, f"mixer {mixer!r} not in {MIXERS}"
-        from repro.core.distributed import GOSSIP_IMPLS, GOSSIP_REPRS
-
-        if gossip_impl not in GOSSIP_IMPLS:
-            raise ValueError(f"gossip_impl {gossip_impl!r} not in {GOSSIP_IMPLS}")
-        if gossip_repr == "auto":
-            from repro.launch.mesh import choose_gossip_repr
-
-            gossip_repr = choose_gossip_repr(cfg.num_nodes, cfg.comm_batch)
-        if gossip_repr not in GOSSIP_REPRS:
-            raise ValueError(
-                f"gossip_repr {gossip_repr!r} not in {GOSSIP_REPRS + ('auto',)}"
-            )
+        # every gossip knob resolves HERE, once, into an explicit mixing
+        # pipeline (core.gossip_plan): unknown values, unsupported
+        # combinations and the deprecated use_kernel spelling all
+        # surface at construction with the knob's name in the message
+        self.plan = resolve_gossip_plan(
+            mixer=mixer,
+            use_kernel=use_kernel,
+            gossip_impl=gossip_impl,
+            gossip_repr=gossip_repr,
+            dp_noise_sigma=dp_noise_sigma,
+            mesh=mesh,
+            num_nodes=cfg.num_nodes,
+            comm_batch=cfg.comm_batch,
+            topology=cfg.topology,
+            cluster_size=cfg.cluster_size,
+        )
         self.model = model
         self.optimizer = optimizer
         self.cfg = cfg
         self.grad_at = grad_at
-        self.mixer = mixer
-        self.use_kernel = mixer == "kernel"  # kept for back-compat introspection
-        # collective schedule for the sharded mixer; "masked" (pairwise
-        # secure aggregation, core.secure_agg) composes with EVERY mixer:
-        # the base mix runs unchanged (allgather schedule when sharded)
-        # and the round adds the exact-zero mask cancellation term
-        self.gossip_impl = gossip_impl
-        self.gossip_repr = gossip_repr       # dense (N,N) matrix vs neighbor table
-        # static-topology candidate lists, host-built once: the sparse
-        # config-driven path builds its (N, B+1) table straight from these
-        # — no (N, N) array ever exists (the population-scale unlock).
-        # None for "random" (per-round graphs go through neighbor_table).
-        self._neighbor_cand = (
-            neighbor_candidates(cfg.topology, cfg.num_nodes, cfg.cluster_size)
-            if gossip_repr == "sparse"
-            else None
-        )
+        # resolved-knob mirrors, kept for back-compat introspection (the
+        # plan is the source of truth)
+        self.mixer = self.plan.mixer
+        self.use_kernel = self.plan.use_kernel
+        self.gossip_impl = self.plan.gossip_impl
+        self.gossip_repr = self.plan.gossip_repr
+        self._neighbor_cand = self.plan.neighbor_cand
         self.mesh = mesh                     # optional explicit mesh for "sharded"
         # BEYOND-PAPER: local differential privacy on the broadcast —
         # Gaussian noise is added to the parameters a node SHARES (its
@@ -582,104 +553,41 @@ class GluADFL:
 
     # ------------------------------------------------------------------
     def _mix_repr(self, adj: jnp.ndarray, active) -> Any:
-        """The round's mixing operator in the configured representation:
+        """The round's mixing operator in the plan's representation:
         dense (N, N) ``mixing_matrix`` or sparse ``(idx, wgt)``
         neighbor table (densifying the latter reproduces the former
         bitwise)."""
-        if self.gossip_repr == "sparse":
-            return neighbor_table(adj, active, self.cfg.comm_batch)
-        return mixing_matrix(adj, active, self.cfg.comm_batch)
+        return self.plan.build_repr(adj, active)
 
     def _plain_mix(self, stacked: PyTree, mix: Any, mesh=None, active=None) -> PyTree:
-        """Mixer dispatch for the noise-free contraction.  ``mix`` is the
-        dense matrix or the sparse ``(idx, wgt)`` table per
-        ``gossip_repr``; dense identity rows already encode inactivity,
-        the sparse paths take ``active`` for a bit-exact where-select.
-        ``mesh`` overrides ``self.mesh`` for the sharded mixer — the
-        swept-sharded path threads its 2-D (grid, node) mesh down here."""
-        if self.gossip_repr == "sparse":
-            idx, wgt = mix
-            if self.mixer == "kernel":
-                return gossip_mix_sparse_kernel(stacked, idx, wgt, active)
-            if self.mixer == "sharded":
-                return sharded_gossip_mix_sparse(
-                    stacked, idx, wgt, active, mesh=mesh or self.mesh
-                )
-            return gossip_mix_sparse_tree(stacked, idx, wgt, active)
-        if self.mixer == "kernel":
-            return gossip_mix_kernel(stacked, mix)
-        if self.mixer == "sharded":
-            return sharded_gossip_mix(
-                stacked, mix, mesh=mesh or self.mesh, impl=self.gossip_impl
-            )
-        return gossip_mix_tree(stacked, mix)
+        """The plan's noise-free contraction.  ``mix`` is the dense
+        matrix or the sparse ``(idx, wgt)`` table per the plan's repr;
+        dense identity rows already encode inactivity, the sparse paths
+        take ``active`` for a bit-exact where-select.  ``mesh`` overrides
+        the plan's mesh — the swept-sharded path threads its 2-D
+        (grid, node) mesh down here."""
+        return self.plan.mix(stacked, mix, active, mesh=mesh)
 
     def _gossip(
         self, premix: PyTree, mix: Any, active, k_dp, mesh=None, mask_ctx=None,
         dp_sigma=None,
     ) -> PyTree:
         """Steps 2+3 (+ optional local-DP broadcast noise, + optional
-        pairwise-masked secure aggregation).  ``mask_ctx`` is the
-        ``(mask_key, (idx, wgt))`` pair ``_round`` builds for
-        ``gossip_impl="masked"``: the cancellation term is added to the
-        FINAL mixed state — after the DP composition too, so masked runs
-        stay bitwise twins of their unmasked counterparts on every
-        mixer/repr/DP combination."""
-        out = self._gossip_base(premix, mix, active, k_dp, mesh, dp_sigma)
-        if mask_ctx is not None:
-            k_mask, (t_idx, t_wgt) = mask_ctx
-            out = gossip_mix_masked(out, t_idx, t_wgt, k_mask)
-        return out
+        pairwise-masked secure aggregation) — the plan's full pipeline.
+        ``mask_ctx`` is the ``(mask_key, (idx, wgt))`` pair ``_round``
+        builds for ``gossip_impl="masked"``."""
+        return self.plan.gossip(
+            premix, mix, active, k_dp,
+            mesh=mesh, mask_ctx=mask_ctx, dp_sigma=dp_sigma,
+        )
 
     def _gossip_base(
         self, premix: PyTree, mix: Any, active, k_dp, mesh=None, dp_sigma=None
     ) -> PyTree:
-        """The unmasked gossip: plain mix, or the local-DP composition.
-
-        ``dp_sigma`` overrides the trainer's ``dp_noise_sigma``: a python
-        float (config path) keeps the concrete ``<= 0`` shortcut; a
-        TRACED per-scenario scalar (the sweep's DP axis) always takes the
-        noise path — a ``sigma=0`` scenario then contracts exact-zero
-        noise, which the DP-off property test pins as bitwise-clean."""
-        if dp_sigma is None:
-            dp_sigma = self.dp_noise_sigma
-        concrete_off = isinstance(dp_sigma, (int, float)) and dp_sigma <= 0.0
-        if k_dp is None or concrete_off:
-            return self._plain_mix(premix, mix, mesh, active)
-        noise_keys = split_like(k_dp, premix)
-        noise = jax.tree.map(
-            lambda w, k_: dp_sigma * jax.random.normal(k_, w.shape, w.dtype),
-            premix, noise_keys,
-        )
-        if self.mixer == "kernel":
-            # fused: noise + mix + clean-self-restore, one kernel pass
-            if self.gossip_repr == "sparse":
-                idx, wgt = mix
-                return gossip_mix_sparse_dp_kernel(premix, noise, idx, wgt, active)
-            return gossip_mix_dp_kernel(premix, noise, mix, active)
-        # composed: neighbours mix the NOISED view; each node re-adds its
-        # own clean self-contribution (it never needs to noise itself)
-        shared = jax.tree.map(jnp.add, premix, noise)
-        mixed_noisy = self._plain_mix(shared, mix, mesh, active)
-        if self.gossip_repr == "sparse":
-            # slot 0 is always self: wgt[:, 0] IS the densified diagonal.
-            # _plain_mix already where-selected inactive rows back to the
-            # noised view, so restore them to the clean premix here too.
-            self_w = mix[1][:, 0]
-            out = jax.tree.map(
-                lambda mn, z: mn - self_w.reshape((-1,) + (1,) * (z.ndim - 1)) * z,
-                mixed_noisy, noise,
-            )
-            a = active > 0
-            return jax.tree.map(
-                lambda o, p: jnp.where(a.reshape((-1,) + (1,) * (o.ndim - 1)), o, p),
-                out, premix,
-            )
-        self_w = jnp.diagonal(mix)  # (N,)
-        return jax.tree.map(
-            lambda mn, z: mn - self_w.reshape((-1,) + (1,) * (z.ndim - 1)) * z,
-            mixed_noisy, noise,
-        )
+        """The unmasked gossip: the plan pipeline without the mask stage
+        (kept as a named seam — the parity tests drive it directly)."""
+        return self.plan.gossip(premix, mix, active, k_dp, mesh=mesh,
+                                dp_sigma=dp_sigma)
 
     # ------------------------------------------------------------------
     def _default_eval_metrics(self, pop_params, val_x, val_y):
@@ -801,6 +709,7 @@ class GluADFL:
         # it — the markov chain's previous state, derivable in the swept
         # and serial paths alike (staleness is carried in FLState)
         prev_active = (state.staleness == 0).astype(jnp.float32)
+        adj = None  # stays None on the sparse static-topology fast path
         if scenario is None:
             if cfg.schedule == "markov":
                 active = markov_active(
@@ -849,20 +758,13 @@ class GluADFL:
         if sc_dp is not None or self.dp_noise_sigma > 0.0:
             key, k_dp = jax.random.split(key)
         mask_ctx = None
-        if self.gossip_impl == "masked":
+        if self.plan.masked:
             # the mask stream is FOLDED off the round key, never split:
             # enabling secure aggregation must not perturb the
             # activity/topology/batch/DP key chain (the bitwise-parity
-            # contract).  Dense rounds build the (N, B+1) table alongside
-            # the matrix purely for mask bookkeeping — the plain mix
-            # itself stays on the configured representation.
+            # contract)
             k_mask = jax.random.fold_in(state.key, MASK_STREAM_TAG)
-            table = (
-                mix
-                if self.gossip_repr == "sparse"
-                else neighbor_table(adj, active, cfg.comm_batch)
-            )
-            mask_ctx = (k_mask, table)
+            mask_ctx = (k_mask, self.plan.mask_table(mix, adj, active))
         mixed = self._gossip(premix, mix, active, k_dp, mesh, mask_ctx, sc_dp)
 
         node_keys = jax.random.split(k_batch, n)
@@ -990,7 +892,7 @@ class GluADFL:
                 eval_every=eval_every, eval_fn=eval_fn, mesh=mesh,
             )
 
-        if self.mixer == "sharded":
+        if self.plan.uses_mesh:
             return jax.vmap(one, spmd_axis_name=mesh.axis_names[0])(
                 states, adjacency, resample, inactive_ratio, extras
             )
@@ -1088,11 +990,7 @@ class GluADFL:
                     "engine='loop' is the single-process debug fallback; "
                     "multi-host runs use the scan engine"
                 )
-            if self.mixer != "sharded":
-                raise ValueError(
-                    f"multi-host training needs mixer='sharded' (the node "
-                    f"axis must span processes), got mixer={self.mixer!r}"
-                )
+            self.plan.require_multihost()
             from repro.core.distributed import _default_federation_mesh
             from repro.launch.multihost import place_federation
 
@@ -1245,12 +1143,7 @@ class GluADFL:
                 "train_sweep batches scenarios on ONE process; multi-host "
                 "runs sweep via serial train() per scenario"
             )
-        if self.mixer == "kernel":
-            raise NotImplementedError(
-                "train_sweep batches the tree or sharded mixer; "
-                "mixer='kernel' (Pallas) is a per-scenario program — "
-                "use serial train() for it"
-            )
+        self.plan.require_sweep()
         n = self.cfg.num_nodes
         if grid.adjacency.shape[-1] != n:
             raise ValueError(
@@ -1267,7 +1160,7 @@ class GluADFL:
         resolved = self._resolve_eval_fn(eval_fn) if do_eval else None
 
         mesh = None
-        if self.mixer == "sharded":
+        if self.plan.uses_mesh:
             from repro.launch.mesh import make_sweep_mesh
 
             mesh = self.mesh or make_sweep_mesh(grid.size, n)

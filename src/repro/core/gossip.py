@@ -143,6 +143,17 @@ def sharded_gossip_mix_sparse(
     return _sharded(stacked_params, idx, wgt, active, **kw)
 
 
+def sharded_gossip_mix_gather(
+    stacked_params: PyTree, idx: jnp.ndarray, wgt: jnp.ndarray, active=None, **kw
+) -> PyTree:
+    """Fully sharded gather-table implementation (re-export; see
+    :func:`repro.core.distributed.sharded_gossip_mix_gather`) — the
+    ``gossip_impl="gather"`` schedule with no gathered (N, D) spike."""
+    from repro.core.distributed import sharded_gossip_mix_gather as _sharded
+
+    return _sharded(stacked_params, idx, wgt, active, **kw)
+
+
 def gossip_mix_masked(mixed: PyTree, idx: jnp.ndarray, wgt: jnp.ndarray, key) -> PyTree:
     """Secure-aggregation wrapper (``gossip_impl="masked"``): add the
     pairwise-mask cancellation term of ``core.secure_agg`` to an

@@ -42,6 +42,33 @@ def node_count(mesh: Mesh, node_axes: tuple[str, ...]) -> int:
     return int(np.prod([mesh.shape[a] for a in node_axes]))
 
 
+def _psum_all_combine(contrib, axis, idx):
+    """Baseline combine: full psum of the (N, ...) stacked contributions,
+    each node slices its own row — every device holds the N-fold temp."""
+    summed = jax.lax.psum(contrib, axis)  # (N, ...) mixed for all nodes
+    return summed[idx]
+
+
+def _psum_scatter_combine(contrib, axis, idx):
+    """Memory-scaled combine: reduce-scatter along the stacked node dim —
+    with one node per shard group the (1, ...) result IS this node's row."""
+    out = jax.lax.psum_scatter(contrib, axis, scatter_dimension=0, tiled=True)
+    return out[0]
+
+
+# combine-schedule registry, mirroring distributed._DENSE_WIRE_SCHEDULES:
+# "masked" aliases the allgather combine (secure aggregation's mask
+# cancellation is a trainer-level wrapper; the DP-mix wire underneath is
+# the full-psum one).  The sparse-only "gather" schedule has no entry —
+# gossip-DP nodes hold replicated full params, there is no row block to
+# halo-rotate.
+_DP_COMBINE = {
+    "allgather": _psum_all_combine,
+    "masked": _psum_all_combine,
+    "psum": _psum_scatter_combine,
+}
+
+
 def gossip_mix_params(
     params: PyTree,
     mix: jnp.ndarray,
@@ -70,10 +97,9 @@ def gossip_mix_params(
 
     (The ring fast path in ``ring_mix_params`` cuts this to 2 permutes.)
     """
-    from repro.core.distributed import GOSSIP_IMPLS
-
-    if impl not in GOSSIP_IMPLS:
-        raise ValueError(f"impl {impl!r} not in {GOSSIP_IMPLS}")
+    if impl not in _DP_COMBINE:
+        raise ValueError(f"impl {impl!r} not in {tuple(_DP_COMBINE)}")
+    combine = _DP_COMBINE[impl]
     axis = node_axes if len(node_axes) > 1 else node_axes[0]
 
     def leaf(w):
@@ -83,15 +109,7 @@ def gossip_mix_params(
             # contribution of THIS node to everyone: w * M[:, idx]
             col = mix_local[:, idx]
             contrib = w_local[None, ...] * col.reshape((-1,) + (1,) * w_local.ndim)
-            if impl == "psum":
-                # reduce-scatter along the stacked node dim: with one node
-                # per shard group the (1, ...) result IS this node's row
-                out = jax.lax.psum_scatter(
-                    contrib, axis, scatter_dimension=0, tiled=True
-                )
-                return out[0]
-            summed = jax.lax.psum(contrib, axis)  # (N, ...) mixed for all nodes
-            return summed[idx]
+            return combine(contrib, axis, idx)
 
         # node-replicated leaves: P() on both sides (tensor-parallel
         # sharding goes through ring_mix_params' explicit `specs`)

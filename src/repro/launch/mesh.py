@@ -109,75 +109,15 @@ def make_sweep_mesh(
     return jax.make_mesh((grid_width, node_width), ("grid", "node"))
 
 
-# per-device budget for the gathered (N, D) federation before the
-# allgather mixer's memory cliff outweighs its ICI-friendly schedule;
-# ~1 GiB leaves headroom for the model step on current HBM/host parts
-DEFAULT_GATHER_BUDGET_BYTES = 1 << 30
-
-
-def choose_gossip_impl(
-    num_nodes: int,
-    param_bytes_per_node: int,
-    *,
-    shards: int | None = None,
-    budget_bytes: int = DEFAULT_GATHER_BUDGET_BYTES,
-    secure: bool = False,
-) -> str:
-    """Memory-scaled gossip-impl selection (``--gossip-impl auto``).
-
-    The ``"allgather"`` mixer materializes the full federation —
-    ``num_nodes * param_bytes_per_node`` — on EVERY device, regardless of
-    how many shards the mesh has; ``"psum"`` keeps the per-device working
-    set at O(N/shards · D) via reduce-scatter.  Below ``budget_bytes``
-    the gathered form wins (one dense collective, what the ICI fabric is
-    best at); above it, psum is the only schedule that fits.  ``shards``
-    defaults to the federation mesh width for ``num_nodes``.
-
-    ``secure=True`` requests pairwise-masked secure aggregation
-    (``core.secure_agg``): the choice is then ``"masked"`` regardless of
-    memory — its wire schedule rides allgather, so it is only offered
-    while the gathered federation fits the budget; past that this raises
-    rather than silently dropping the privacy layer (psum has no masked
-    sibling: the reduce-scatter never materializes per-neighbor wires to
-    mask).
-    """
-    if shards is None:
-        shards = make_federation_mesh(num_nodes).shape["node"]
-    gathered = num_nodes * param_bytes_per_node
-    if secure:
-        if shards > 1 and gathered > budget_bytes:
-            raise ValueError(
-                f"secure (masked) gossip rides the allgather schedule, but "
-                f"the gathered federation ({gathered} bytes) exceeds the "
-                f"per-device budget ({budget_bytes}); shrink the model or "
-                f"raise budget_bytes"
-            )
-        return "masked"
-    if shards <= 1:
-        return "allgather"  # single shard: gather is a no-op copy
-    return "allgather" if gathered <= budget_bytes else "psum"
-
-
-# sparse tables win once the kept row (B+1 entries) is a small fraction
-# of N; 4x covers the gather/top_k bookkeeping the dense matmul doesn't pay
-SPARSE_GOSSIP_FACTOR = 4
-
-
-def choose_gossip_repr(
-    num_nodes: int, comm_batch: int, *, factor: int = SPARSE_GOSSIP_FACTOR
-) -> str:
-    """Mixing-operator representation selection (``--gossip-repr auto``).
-
-    Every mixing row has at most ``comm_batch + 1`` nonzeros (Algorithm 1
-    caps each node at B neighbours), so the dense (N, N) matrix carries
-    ``N / (B+1)``-fold pure waste.  Pick the sparse neighbor table
-    (``core.topology.neighbor_table``) once ``B+1 ≪ N`` — concretely
-    ``num_nodes >= factor * (comm_batch + 1)`` — and keep the dense
-    matrix for small federations where the one-matmul contraction is
-    simpler than the gather and the waste is noise.  At the paper's
-    N=226 / B=7 this picks sparse (226 >= 32); a 16-node smoke test
-    stays dense."""
-    return "sparse" if num_nodes >= factor * (comm_batch + 1) else "dense"
+# the auto-knob policies (choose_gossip_impl / choose_gossip_repr and
+# their budget constants) are plan-resolution policies and live with the
+# plan in core.gossip_plan; re-exported here for call-site back-compat
+from repro.core.gossip_plan import (  # noqa: E402,F401
+    DEFAULT_GATHER_BUDGET_BYTES,
+    SPARSE_GOSSIP_FACTOR,
+    choose_gossip_impl,
+    choose_gossip_repr,
+)
 
 
 def make_gossip_dp_mesh(*, nodes: int = 4, multi_pod: bool = False):

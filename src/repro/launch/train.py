@@ -160,11 +160,13 @@ def main():
     ap.add_argument("--fast-data", action="store_true",
                     help="6-day synthetic series (CI scale)")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="Pallas gossip-mix kernel (interpret mode on CPU)")
+                    help="DEPRECATED: pass --mixer kernel instead (this "
+                         "flag maps through, with a DeprecationWarning; it "
+                         "also still selects the Pallas LSTM-cell kernel)")
     ap.add_argument("--mixer", default=None, choices=["tree", "kernel", "sharded"],
                     help="gossip mixer: tree (einsum), kernel (Pallas), "
                          "sharded (node-sharded mesh collective); default "
-                         "tree, or kernel when --use-kernel")
+                         "tree")
     ap.add_argument("--chunk", type=int, default=None,
                     help="rounds per compiled lax.scan chunk (host syncs "
                          "once per chunk); 0 = per-round python loop; "
@@ -200,12 +202,16 @@ def main():
                          "INSIDE the scanned chunk (0 = off); no "
                          "per-round host sync")
     ap.add_argument("--gossip-impl", default="allgather",
-                    choices=["allgather", "psum", "masked", "auto"],
+                    choices=["allgather", "psum", "masked", "gather", "auto"],
                     help="gossip schedule: allgather (per-device O(N*D) "
                          "gather), psum (reduce-scatter, per-device "
                          "O(N/shards*D)), masked (pairwise-masked secure "
                          "aggregation — any mixer; bitwise the allgather "
-                         "result), or auto (memory-based choice)")
+                         "result), gather (sharded gather tables: ppermute "
+                         "halo rotation, per-device O(N/shards*D) with NO "
+                         "gathered federation — needs --mixer sharded and "
+                         "the sparse repr; the 100k-node schedule), or "
+                         "auto (memory-based choice)")
     ap.add_argument("--gossip-repr", default="auto",
                     choices=["dense", "sparse", "auto"],
                     help="mixing-operator representation: dense (N, N) "
@@ -225,6 +231,23 @@ def main():
     ap.add_argument("--out", default="experiments/checkpoints")
     ap.add_argument("overrides", nargs="*", help="cfg overrides a.b=c")
     args = ap.parse_args()
+
+    if args.use_kernel:
+        import warnings
+
+        warnings.warn(
+            "--use-kernel is deprecated; pass --mixer kernel instead "
+            "(the flag maps through for now and will be removed)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if args.mixer is None:
+            args.mixer = "kernel"
+        elif args.mixer != "kernel":
+            raise SystemExit(
+                f"--use-kernel contradicts --mixer {args.mixer}; "
+                f"pass one or the other"
+            )
 
     from repro.launch import multihost
 
@@ -255,7 +278,7 @@ def main():
         if distributed:
             raise SystemExit("scenario sweeps are single-process "
                              "(drop --num-processes or --sweep-ratios)")
-        if args.mixer == "kernel" or args.use_kernel:
+        if args.mixer == "kernel":
             raise SystemExit("scenario sweeps batch the tree or sharded "
                              "mixer; the Pallas kernel is per-scenario "
                              "(drop --mixer kernel/--use-kernel)")
@@ -333,11 +356,14 @@ def main():
     if gossip_repr == "auto":
         from repro.launch.mesh import choose_gossip_repr
 
-        gossip_repr = choose_gossip_repr(fed.num_nodes, fl_cfg.comm_batch)
+        gossip_repr = choose_gossip_repr(fed.num_nodes, fl_cfg.comm_batch,
+                                         mesh=sweep_mesh)
         print(f"gossip-repr auto -> {gossip_repr}")
 
+    # args.mixer is already "kernel" when --use-kernel was passed (the
+    # deprecation shim above), so the flag itself stays out of the plan
     trainer = GluADFL(model, get_optimizer(cfg.train.optimizer, cfg.train.lr),
-                      fl_cfg, use_kernel=args.use_kernel, mixer=args.mixer,
+                      fl_cfg, mixer=args.mixer,
                       gossip_impl=gossip_impl, gossip_repr=gossip_repr,
                       mesh=sweep_mesh)
 

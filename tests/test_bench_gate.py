@@ -187,6 +187,39 @@ def test_baseline_sparse_row_requires_fresh_ratio(gate, tmp_path):
                 _sparse_report(SPARSE_BASE)) == 1
 
 
+GATHER_BASE = dict(SPARSE_BASE, **{"sparse-gossip-100k": 0.15})
+GATHER_MEM = {"num_nodes": 100000, "node_shards": 8,
+              "param_bytes_per_node": 404,
+              "allgather_gathered_bytes_per_device": 40400000,
+              "gather_table_bytes_per_device": 10100000}
+
+
+def test_gather_100k_row_presence_and_memory_record(gate, tmp_path):
+    """The 100k gather-table row is presence-gated like the other scale
+    rows, and a baseline carrying it also demands the fresh run's
+    per-device gather_table_memory_bytes record."""
+    base = _sparse_report(GATHER_BASE, 1.2)
+    base["gather_table_memory_bytes"] = GATHER_MEM
+    ok = _sparse_report(GATHER_BASE, 1.2)
+    ok["gather_table_memory_bytes"] = GATHER_MEM
+    assert _run(gate, tmp_path, base, ok) == 0
+    # the row vanished -> fail
+    gone = {k: v for k, v in GATHER_BASE.items() if k != "sparse-gossip-100k"}
+    gone_report = _sparse_report(gone, 1.2)
+    gone_report["gather_table_memory_bytes"] = GATHER_MEM
+    assert _run(gate, tmp_path, base, gone_report) == 1
+    # the memory record vanished (or lost a key) -> fail
+    no_mem = _sparse_report(GATHER_BASE, 1.2)
+    assert _run(gate, tmp_path, base, no_mem) == 1
+    partial = _sparse_report(GATHER_BASE, 1.2)
+    partial["gather_table_memory_bytes"] = {
+        k: v for k, v in GATHER_MEM.items()
+        if k != "gather_table_bytes_per_device"}
+    assert _run(gate, tmp_path, base, partial) == 1
+    # old baselines without the row demand neither
+    assert _run(gate, tmp_path, _sparse_report(SPARSE_BASE, 1.2), no_mem) == 0
+
+
 # ------------------------------------------------- masked-gossip overhead row
 
 

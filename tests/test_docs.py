@@ -29,6 +29,25 @@ def test_every_module_has_a_docstring():
 
 
 @pytest.mark.docs
+def test_no_gossip_knob_dispatch_outside_plan():
+    """tools/check_gossip_dispatch.py: core/ may not string-dispatch on
+    mixer / gossip_impl / gossip_repr outside core/gossip_plan.py — the
+    plan resolver is the only dispatcher."""
+    out = _run([sys.executable, str(ROOT / "tools" / "check_gossip_dispatch.py")])
+    assert out.returncode == 0, out.stderr
+
+
+@pytest.mark.docs
+def test_knob_matrix_matches_registry():
+    """tools/gen_knob_matrix.py --check: the committed ARCHITECTURE.md
+    knob matrix equals the block generated from the backend registry
+    (regenerate with --write after registering/changing a backend)."""
+    out = _run([sys.executable, str(ROOT / "tools" / "gen_knob_matrix.py"),
+                "--check"])
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+@pytest.mark.docs
 def test_readme_quickstart_block_executes(tmp_path):
     """The README's first ``python`` fence is the quickstart; it must run
     end-to-end (train + cross-predict) exactly as written."""

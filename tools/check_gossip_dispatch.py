@@ -1,0 +1,128 @@
+"""Dispatch lint: no gossip-knob string dispatch in ``core/`` outside
+the plan module.
+
+The GossipPlan refactor (``core.gossip_plan``) moved every ``mixer ==
+"..."`` / ``gossip_impl == "..."`` / ``gossip_repr == "..."`` decision
+into one resolution step; this lint keeps the maze from growing back.
+It flags, in every ``src/repro/core/*.py`` except ``gossip_plan.py``:
+
+  * ``==`` / ``!=`` comparisons between a name or attribute called
+    ``mixer`` / ``gossip_impl`` / ``gossip_repr`` / ``impl`` (any
+    dotted prefix, e.g. ``self.mixer`` or ``args.gossip_repr``) and a
+    string literal;
+  * ``in`` / ``not in`` tests of such a name against a LITERAL tuple /
+    list / set of strings.
+
+Membership tests against NAMED registries (``impl not in GOSSIP_IMPLS``,
+``impl not in _DENSE_WIRE_SCHEDULES``) are the sanctioned validation
+pattern and are NOT flagged — the registry is the single source of
+truth, a literal tuple is a fork of it.
+
+    python tools/check_gossip_dispatch.py [--root src/repro/core]
+
+Exit 0 when clean; exit 1 listing every offending comparison with file,
+line, and source text.  Wired into the docs CI job next to the
+docstring lint.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# knob names whose string dispatch belongs in the plan resolver.  Bare
+# `impl` is included: it is the knob's spelling inside the gossip layers
+KNOB_NAMES = {"mixer", "gossip_impl", "gossip_repr", "impl"}
+
+# modules allowed to dispatch: the plan module IS the dispatcher
+EXEMPT = {"gossip_plan.py"}
+
+
+def _knob_name(node: ast.expr) -> str | None:
+    """The trailing identifier of a Name/Attribute if it is a knob."""
+    if isinstance(node, ast.Name) and node.id in KNOB_NAMES:
+        return node.id
+    if isinstance(node, ast.Attribute) and node.attr in KNOB_NAMES:
+        return node.attr
+    return None
+
+
+def _is_string_literal(node: ast.expr) -> bool:
+    return isinstance(node, ast.Constant) and isinstance(node.value, str)
+
+
+def _is_literal_string_container(node: ast.expr) -> bool:
+    if not isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return False
+    return bool(node.elts) and all(_is_string_literal(e) for e in node.elts)
+
+
+def dispatch_sites(tree: ast.AST) -> list[ast.Compare]:
+    """Every Compare node that string-dispatches on a gossip knob."""
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        operands = [node.left, *node.comparators]
+        names = [_knob_name(o) for o in operands]
+        if not any(names):
+            continue
+        for op, right_i in zip(node.ops, range(1, len(operands))):
+            left, right = operands[right_i - 1], operands[right_i]
+            if isinstance(op, (ast.Eq, ast.NotEq)):
+                pair = (
+                    (_knob_name(left) and _is_string_literal(right))
+                    or (_knob_name(right) and _is_string_literal(left))
+                )
+                if pair:
+                    hits.append(node)
+                    break
+            elif isinstance(op, (ast.In, ast.NotIn)):
+                if _knob_name(left) and _is_literal_string_container(right):
+                    hits.append(node)
+                    break
+    return hits
+
+
+def check(root: Path) -> list[str]:
+    """Returns human-readable violation lines for every file in root."""
+    violations = []
+    for path in sorted(root.rglob("*.py")):
+        if path.name in EXEMPT:
+            continue
+        src = path.read_text()
+        try:
+            tree = ast.parse(src)
+        except SyntaxError as e:
+            violations.append(f"{path}: SYNTAX ERROR: {e}")
+            continue
+        lines = src.splitlines()
+        for node in dispatch_sites(tree):
+            text = lines[node.lineno - 1].strip() if node.lineno <= len(lines) else ""
+            violations.append(f"{path}:{node.lineno}: {text}")
+    return violations
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(ROOT / "src" / "repro" / "core"))
+    args = ap.parse_args(argv)
+    violations = check(Path(args.root))
+    if violations:
+        print(
+            "gossip-knob string dispatch outside core/gossip_plan.py "
+            "(register a backend / resolve in the plan instead):",
+            file=sys.stderr,
+        )
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print(f"OK: no gossip-knob string dispatch under {args.root}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
